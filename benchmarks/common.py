@@ -1,0 +1,53 @@
+"""Shared benchmark infrastructure: dataset -> fitted/compiled DT2CAM with
+on-disk tree caching (Credit takes ~10s to fit; cache under artifacts/)."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import DT2CAM, DecisionTree, compile_tree, train_tree
+from repro.dt import DATASETS, load_split
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+TREES = os.path.join(ART, "trees")
+
+__all__ = ["fitted_tree", "compiled", "ART", "emit"]
+
+
+def fitted_tree(name: str) -> tuple[DecisionTree, tuple]:
+    spec = DATASETS[name]
+    os.makedirs(TREES, exist_ok=True)
+    path = os.path.join(TREES, f"{name}.npz")
+    Xtr, ytr, Xte, yte = load_split(name)
+    if os.path.exists(path):
+        z = np.load(path)
+        tree = DecisionTree(z["feature"], z["threshold"], z["left"],
+                            z["right"], z["value"], int(z["n_features"]),
+                            int(z["n_classes"]))
+    else:
+        tree = train_tree(Xtr, ytr, max_depth=spec.max_depth,
+                          max_leaves=spec.max_leaves,
+                          min_samples_leaf=spec.min_samples_leaf)
+        np.savez(path, feature=tree.feature, threshold=tree.threshold,
+                 left=tree.left, right=tree.right, value=tree.value,
+                 n_features=tree.n_features, n_classes=tree.n_classes)
+    return tree, (Xtr, ytr, Xte, yte)
+
+
+def compiled(name: str, s: int):
+    tree, data = fitted_tree(name)
+    return compile_tree(tree, s), data
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print a benchmark table as CSV (name,key=value CSV convention)."""
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(f"### {name}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))
+    print()

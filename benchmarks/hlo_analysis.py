@@ -1,0 +1,245 @@
+"""Loop-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scanned computation (layer stacks, microbatch accumulation, flash-attention
+chunks, MoE groups) is undercounted by its trip count.  This module parses
+the *partitioned, post-optimization* HLO text (per-device shapes) and
+computes — with while-loop trip multipliers applied recursively:
+
+  * dot FLOPs        2 x prod(output dims) x prod(lhs contracting dims),
+                     operand shapes resolved via a per-computation symbol
+                     table (params + instruction defs);
+  * collective bytes output bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute
+                     (async -start/-done pairs counted once), per type;
+  * HBM bytes        post-fusion HLO executes one kernel per top-level
+                     instruction, so Σ(output bytes + operand bytes) over
+                     instructions (skipping free ops: parameter/constant/
+                     tuple/GTE/bitcast) approximates HBM traffic.
+
+Trip counts come from the loop-condition computation: the largest integer
+constant compared against the induction variable (standard XLA scan
+lowering).  Non-dot FLOPs (elementwise, reductions) are excluded from the
+FLOPs term — dot terms dominate at these sizes (documented in
+EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import re
+from functools import lru_cache
+
+__all__ = ["analyze_hlo", "analyze_file", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                    r"\[([0-9,]*)\]")
+_DEF = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPNAME = re.compile(r"^\(?(?:\(|\s)*(?:[\w\[\],{}/*\s]*?)?\s*"
+                     r"([a-z][a-z0-9\-]*)\(")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_COLLECTIVE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(text: str) -> list[int] | None:
+    m = _SHAPE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_by_type: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.dot_flops * k, self.collective_bytes * k,
+                       self.hbm_bytes * k,
+                       {t: b * k for t, b in self.coll_by_type.items()})
+
+    def add(self, other: "HloCost") -> None:
+        self.dot_flops += other.dot_flops
+        self.collective_bytes += other.collective_bytes
+        self.hbm_bytes += other.hbm_bytes
+        for t, b in other.coll_by_type.items():
+            self.coll_by_type[t] = self.coll_by_type.get(t, 0.0) + b
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: list
+    symbols: dict          # %name -> shape text (dtype[dims])
+    entry: bool = False
+
+
+def _parse(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            header = line
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", header)
+            if not m:
+                continue
+            cur = _Comp(m.group(2), [], {}, entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            # parameters in header: name: TYPE[dims]
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\w+\[[0-9,]*\]|\([^)]*\)))",
+                                  header):
+                cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or not line:
+            continue
+        cur.lines.append(line)
+        dm = _DEF.match(line)
+        if dm:
+            rhs = dm.group(2)
+            sm = _SHAPE.search(rhs.split("(", 1)[0]) or _SHAPE.search(rhs)
+            if sm:
+                cur.symbols[dm.group(1)] = sm.group(0)
+    return comps
+
+
+def _dot_flops(line: str, comp: _Comp) -> float:
+    lhs_rhs = line.split(" dot(", 1)
+    if len(lhs_rhs) != 2:
+        return 0.0
+    out_dims = _first_shape_dims(lhs_rhs[0])
+    if out_dims is None:
+        return 0.0
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    ops = _OPERANDS.findall(lhs_rhs[1].split(")", 1)[0])
+    cm = re.search(r"lhs_contracting_dims={([0-9,]*)}", line)
+    contract = 1
+    if cm and ops:
+        lhs_shape = comp.symbols.get(ops[0])
+        dims = _first_shape_dims(lhs_shape or "") or []
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _line_cost(line: str, comp: _Comp) -> HloCost:
+    c = HloCost()
+    dm = _DEF.match(line)
+    if not dm:
+        return c
+    rhs = dm.group(2)
+    # op name = token right before the first '(' after the output type
+    after_type = rhs
+    sm = _SHAPE.search(rhs)
+    opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+    op = opm.group(1) if opm else ""
+    out_bytes = _shape_bytes(rhs.split(op + "(", 1)[0]) if op else 0
+
+    if op == "dot":
+        c.dot_flops += _dot_flops(line, comp)
+
+    mcol = _COLLECTIVE.search(line)
+    if mcol and mcol.group(2) != "-done":
+        ctype = mcol.group(1)
+        c.collective_bytes += out_bytes
+        c.coll_by_type[ctype] = c.coll_by_type.get(ctype, 0.0) + out_bytes
+
+    if op and op not in _FREE_OPS and not op.endswith("-done"):
+        # HBM traffic model: each post-fusion instruction writes its output
+        # once; reads are NOT charged (they would be charged once per
+        # consumer and overcount heavily).  This is a lower bound on reads
+        # + exact on writes; converts/copies excluded (fused on TPU).
+        if op not in ("convert", "copy", "while", "conditional",
+                      "broadcast", "reshape", "transpose"):
+            c.hbm_bytes += out_bytes
+    return c
+
+
+def _trip_count(cond: _Comp | None) -> int:
+    if cond is None:
+        return 1
+    best = 1
+    for line in cond.lines:
+        for m in _CONST_INT.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse(text)
+    entry = next((c.name for c in comps.values() if c.entry), None)
+    if entry is None:
+        referenced = set()
+        for comp in comps.values():
+            for line in comp.lines:
+                for m in re.finditer(
+                        r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)",
+                        line):
+                    referenced.add(m.group(1))
+        cands = [n for n in comps if n not in referenced]
+        entry = cands[-1] if cands else next(iter(comps))
+
+    memo: dict[str, HloCost] = {}
+
+    def cost_of(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        total = HloCost()
+        memo[name] = total
+        comp = comps.get(name)
+        if comp is None:
+            return total
+        for line in comp.lines:
+            total.add(_line_cost(line, comp))
+            if " while(" in line or line.startswith("while("):
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                if mb:
+                    trips = _trip_count(comps.get(mc.group(1)) if mc else None)
+                    total.add(cost_of(mb.group(1)).scaled(trips))
+            else:
+                for m in re.finditer(
+                        r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+                    if m.group(1) in comps and m.group(1) != name:
+                        total.add(cost_of(m.group(1)))
+        memo[name] = total
+        return total
+
+    return cost_of(entry)
+
+
+@lru_cache(maxsize=None)
+def analyze_file(path: str) -> HloCost:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze_hlo(f.read())

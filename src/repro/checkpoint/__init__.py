@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic save, retention, auto-resume,
+elastic resharding on restore."""
+from .manager import CheckpointManager, restore_resharded
+
+__all__ = ["CheckpointManager", "restore_resharded"]

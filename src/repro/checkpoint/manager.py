@@ -1,0 +1,152 @@
+"""Checkpoint manager: atomic, validated, retained, elastically reshardable.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042.tmp/...      # written first
+    <dir>/step_000042/             # atomic rename after fsync
+        manifest.json              # step, leaf paths, shapes, dtypes, crc
+        arr_00000.npy ...          # one file per pytree leaf
+
+Failure semantics:
+  * a crash mid-save leaves only a ``.tmp`` dir -> ignored and GC'd,
+  * ``latest_step`` validates the manifest and every leaf file before
+    declaring a checkpoint restorable; corrupt dirs are skipped (the
+    previous step is used),
+  * retention keeps the newest ``keep`` checkpoints.
+
+Elastic restore: leaves are loaded host-side and ``jax.device_put`` onto the
+*target* shardings — the restore mesh may differ from the save mesh
+(elastic scaling), since leaves are saved unsharded (per-host gather; on
+multi-host pods each host writes its addressable shards and restore
+reassembles — single-process here, documented in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "restore_resharded"]
+
+
+def _flatten(tree) -> tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ----------------------------------------------------------- save
+    def save(self, step: int, state) -> str:
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, _ = _flatten(state)
+        manifest = {"step": step, "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            path = f"arr_{i:05d}.npy"
+            np.save(os.path.join(tmp, path), arr)
+            manifest["leaves"].append({
+                "path": path,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc": zlib.crc32(arr.tobytes()),
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    # -------------------------------------------------------- restore
+    def _steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _valid(self, step: int) -> bool:
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        mf = os.path.join(d, "manifest.json")
+        if not os.path.exists(mf):
+            return False
+        try:
+            with open(mf) as f:
+                manifest = json.load(f)
+            for leaf in manifest["leaves"]:
+                arr = np.load(os.path.join(d, leaf["path"]), mmap_mode="r")
+                if list(arr.shape) != leaf["shape"]:
+                    return False
+            return True
+        except Exception:
+            return False
+
+    def latest_step(self) -> Optional[int]:
+        for step in reversed(self._steps()):
+            if self._valid(step):
+                return step
+        return None
+
+    def restore(self, state_like, step: Optional[int] = None,
+                *, verify_crc: bool = False):
+        """Restore into the structure (and shardings) of ``state_like``.
+        ``state_like`` may be a pytree of arrays or ShapeDtypeStructs with
+        ``.sharding`` — leaves are device_put onto those shardings."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves_like, treedef = _flatten(state_like)
+        assert len(leaves_like) == len(manifest["leaves"]), (
+            "checkpoint/state structure mismatch")
+        out = []
+        for like, meta in zip(leaves_like, manifest["leaves"]):
+            arr = np.load(os.path.join(d, meta["path"]))
+            if verify_crc and zlib.crc32(arr.tobytes()) != meta["crc"]:
+                raise IOError(f"crc mismatch in {meta['path']}")
+            sharding = getattr(like, "sharding", None)
+            if sharding is not None and not isinstance(
+                    sharding, jax.sharding.SingleDeviceSharding):
+                out.append(jax.device_put(arr, sharding))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out), step
+
+    # ------------------------------------------------------ retention
+    def _gc(self) -> None:
+        steps = self._steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+        for d in os.listdir(self.dir):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+
+def restore_resharded(mgr: CheckpointManager, state_sds):
+    """Elastic restore: load the latest checkpoint onto (possibly different)
+    target shardings — the save-time mesh shape is irrelevant."""
+    return mgr.restore(state_sds)

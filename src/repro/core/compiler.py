@@ -1,0 +1,116 @@
+"""DT-HW compiler front door: tree -> rule table -> ternary LUT -> TCAM tiles.
+
+``compile_tree`` performs the paper's full DT-HW pipeline (§II.A) and the
+synthesizer mapping step (§II.C.1); ``DT2CAM.fit`` adds CART training so the
+whole framework is one call from raw data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .cart import DecisionTree, predict, train_tree
+from .encode import encode_inputs, encode_table
+from .energy import DEFAULT_HW, HardwareParams
+from .lut import TernaryLUT
+from .nonideal import apply_saf, noisy_inputs
+from .reduce import RuleTable, reduce_tree
+from .simulate import SimResult, simulate
+from .synth import TCAMLayout, synthesize
+
+__all__ = ["CompiledDT", "compile_tree", "DT2CAM"]
+
+
+@dataclasses.dataclass
+class CompiledDT:
+    tree: DecisionTree
+    table: RuleTable
+    lut: TernaryLUT
+    layout: TCAMLayout
+
+    @property
+    def lut_shape(self) -> tuple[int, int]:
+        """(rows, width) — the paper's 'LUT Size' column in Table V."""
+        return (self.lut.n_rows, self.lut.width)
+
+
+def compile_tree(
+    tree: DecisionTree, s: int = 128, *, nan_full_dontcare: bool = True,
+    seed: int = 0,
+) -> CompiledDT:
+    table = reduce_tree(tree)
+    lut = encode_table(table, nan_full_dontcare=nan_full_dontcare)
+    layout = synthesize(lut, s, seed=seed)
+    return CompiledDT(tree=tree, table=table, lut=lut, layout=layout)
+
+
+class DT2CAM:
+    """End-to-end framework object: fit a CART tree, compile to TCAM, infer.
+
+    >>> m = DT2CAM(s=128).fit(X_train, y_train)
+    >>> result = m.infer(X_test)                      # ideal hardware
+    >>> result.accuracy(y_test) == m.golden_accuracy(X_test, y_test)
+    """
+
+    def __init__(
+        self,
+        s: int = 128,
+        *,
+        max_depth: int = 12,
+        min_samples_leaf: int = 1,
+        hw: HardwareParams = DEFAULT_HW,
+        seed: int = 0,
+    ) -> None:
+        self.s = s
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.hw = hw
+        self.seed = seed
+        self.compiled: Optional[CompiledDT] = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "DT2CAM":
+        tree = train_tree(
+            X, y, max_depth=self.max_depth, min_samples_leaf=self.min_samples_leaf
+        )
+        self.compiled = compile_tree(tree, self.s, seed=self.seed)
+        return self
+
+    # -- golden reference (paper: 'accuracy obtained in Python') --
+    def golden_predict(self, X: np.ndarray) -> np.ndarray:
+        assert self.compiled is not None, "call fit() first"
+        return predict(self.compiled.tree, X)
+
+    def golden_accuracy(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float((self.golden_predict(X) == np.asarray(y)).mean())
+
+    # -- hardware-functional inference --
+    def infer(
+        self,
+        X: np.ndarray,
+        *,
+        selective_precharge: bool = True,
+        p_sa0: float = 0.0,
+        p_sa1: float = 0.0,
+        sa_sigma: float = 0.0,
+        sigma_in: float = 0.0,
+        rng: Optional[np.random.Generator] = None,
+    ) -> SimResult:
+        assert self.compiled is not None, "call fit() first"
+        rng = rng or np.random.default_rng(self.seed)
+        layout = self.compiled.layout
+        if p_sa0 > 0 or p_sa1 > 0:
+            layout = dataclasses.replace(
+                layout, cells=apply_saf(layout.cells, p_sa0, p_sa1, rng)
+            )
+        Xn = noisy_inputs(X, sigma_in, rng)
+        xbits = encode_inputs(self.compiled.lut, Xn)
+        return simulate(
+            layout,
+            xbits,
+            hw=self.hw,
+            selective_precharge=selective_precharge,
+            sa_sigma=sa_sigma,
+            rng=rng,
+        )

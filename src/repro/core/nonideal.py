@@ -1,0 +1,79 @@
+"""Hardware non-idealities (paper §II.C.2, Table I, Fig 7/8).
+
+Three mechanisms:
+  * Stuck-At-Faults: each of the two resistive elements of a 2T2R cell
+    independently sticks to HRS (SA0, prob p_sa0) or LRS (SA1, prob p_sa1).
+    The resulting {R1, R2} pair maps back to a cell state, including the
+    pathological {LRS, LRS} = always-mismatch (Table I).
+  * SA manufacturing variability: handled inside ``simulate`` (σ_sa offsets on
+    V_ref of individual sense amplifiers).
+  * Input encoding noise: N(0, σ_in) added to normalized features before
+    encoding.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .lut import CELL_0, CELL_1, CELL_MM, CELL_X
+
+__all__ = ["apply_saf", "noisy_inputs", "CELL_TO_PAIR"]
+
+# cell state -> (R1 is LRS?, R2 is LRS?) — Table I encoding
+CELL_TO_PAIR = {
+    CELL_0: (False, True),   # {HRS, LRS}
+    CELL_1: (True, False),   # {LRS, HRS}
+    CELL_X: (False, False),  # {HRS, HRS}
+    CELL_MM: (True, True),   # {LRS, LRS}
+}
+_PAIR_TO_CELL = np.zeros((2, 2), dtype=np.int8)
+for _c, (_a, _b) in CELL_TO_PAIR.items():
+    _PAIR_TO_CELL[int(_a), int(_b)] = _c
+
+
+def apply_saf(
+    cells: np.ndarray,
+    p_sa0: float,
+    p_sa1: float,
+    rng: Optional[np.random.Generator] = None,
+) -> np.ndarray:
+    """Inject stuck-at faults into a cell-state array (any shape).
+
+    Each resistive element independently becomes stuck-at-HRS with prob p_sa0
+    and stuck-at-LRS with prob p_sa1 (mutually exclusive draws; if both fire
+    the draw is resolved 50/50, matching independent physical defects)."""
+    rng = rng or np.random.default_rng(0)
+    cells = np.asarray(cells)
+    r1_lrs = np.isin(cells, (CELL_1, CELL_MM))
+    r2_lrs = np.isin(cells, (CELL_0, CELL_MM))
+
+    def stick(is_lrs: np.ndarray) -> np.ndarray:
+        u = rng.random(cells.shape)
+        stuck0 = u < p_sa0
+        stuck1 = (u >= p_sa0) & (u < p_sa0 + p_sa1)
+        # tie-break region when p_sa0 + p_sa1 > 1 is impossible for paper's
+        # ranges (max 5% + 5%); assert to be safe.
+        out = is_lrs.copy()
+        out[stuck0] = False  # stuck at HRS
+        out[stuck1] = True   # stuck at LRS
+        return out
+
+    if p_sa0 + p_sa1 > 1.0:
+        raise ValueError("p_sa0 + p_sa1 must be <= 1")
+    new_r1 = stick(r1_lrs)
+    new_r2 = stick(r2_lrs)
+    return _PAIR_TO_CELL[new_r1.astype(int), new_r2.astype(int)]
+
+
+def noisy_inputs(
+    X: np.ndarray,
+    sigma_in: float,
+    rng: Optional[np.random.Generator] = None,
+) -> np.ndarray:
+    """Add input-encoding noise to (normalized) features (paper: σ_in sweep)."""
+    if sigma_in <= 0:
+        return np.asarray(X, dtype=np.float64)
+    rng = rng or np.random.default_rng(0)
+    X = np.asarray(X, dtype=np.float64)
+    return X + rng.normal(0.0, sigma_in, size=X.shape)

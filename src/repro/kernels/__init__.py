@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the massively
+parallel ternary match (TCAM search).  See DESIGN.md §2 for the
+analog-ReCAM -> TPU mapping.
+
+  tcam_match.py  — MXU bitplane-matmul kernel, grid-sequential selective
+                   precharge (handles all cell states incl. SAF CELL_MM)
+  tcam_packed.py — bit-packed XOR/AND/popcount VPU kernel (16x fewer bytes)
+  ops.py         — engine selection, padding, SA-variability lowering,
+                   jit'd serving path
+  ref.py         — pure-jnp oracles both kernels are validated against
+"""
+from .ops import default_interpret, sa_kmax, tcam_infer, tcam_match
+from .ref import pack_bits, tcam_match_packed_ref, tcam_match_ref
+from .tcam_match import tcam_match_pallas
+from .tcam_packed import tcam_match_packed_pallas
+
+__all__ = [
+    "default_interpret", "sa_kmax", "tcam_infer", "tcam_match",
+    "pack_bits", "tcam_match_packed_ref", "tcam_match_ref",
+    "tcam_match_pallas", "tcam_match_packed_pallas",
+]

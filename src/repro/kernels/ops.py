@@ -1,0 +1,174 @@
+"""Public jit'd TCAM-match ops: engine selection, padding, packing, and the
+JAX serving path (`tcam_infer`) that the examples / serving stack use.
+
+Engines:
+  'mxu'    — float bitplane matmul kernel (tcam_match.py); handles every cell
+             state incl. SAF-induced CELL_MM.
+  'packed' — bit-packed popcount kernel (tcam_packed.py); 16x fewer HBM bytes;
+             requires S % 32 == 0 and no CELL_MM cells.
+  'ref'    — pure-jnp oracle (ref.py).
+  'auto'   — packed when legal, else mxu.
+
+All engines share the contract: inputs are the *padded search words* from
+``TCAMLayout.pad_inputs`` (decoder bit + encoded features + padding) and the
+layout's cell grid; outputs are (survive, evals) as defined in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.energy import DEFAULT_HW, HardwareParams
+from ..core.lut import CELL_MM, bitplanes
+from ..core.simulate import sense_voltage
+from ..core.synth import TCAMLayout
+from .ref import pack_bits, tcam_match_packed_ref, tcam_match_ref
+from .tcam_match import tcam_match_pallas
+from .tcam_packed import tcam_match_packed_pallas
+
+__all__ = ["tcam_match", "tcam_infer", "sa_kmax", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = a.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def tcam_match(
+    cells: np.ndarray,            # (R, W) int8 cell states (layout.cells)
+    xpad: jax.Array,              # (B, W) padded search words {0,1}
+    s: int,
+    kmax: Optional[jax.Array] = None,   # (R, D) int32
+    *,
+    engine: str = "auto",
+    block_b: int = 128,
+    block_r: int = 128,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Match search words against a tiled TCAM; returns (survive, evals),
+    both (B, R) int32, selective-precharge semantics (see ref.py)."""
+    interpret = default_interpret() if interpret is None else interpret
+    r, w = cells.shape
+    b = xpad.shape[0]
+    d = w // s
+    assert w % s == 0
+    has_mm = bool(np.any(np.asarray(cells) == CELL_MM))
+    if engine == "auto":
+        engine = "packed" if (s % 32 == 0 and not has_mm) else "mxu"
+    if engine == "packed" and (s % 32 != 0 or has_mm):
+        raise ValueError("packed engine needs S % 32 == 0 and no CELL_MM cells")
+
+    kmax = jnp.zeros((r, d), jnp.int32) if kmax is None else kmax.astype(jnp.int32)
+    is0np, is1np = bitplanes(np.asarray(cells))
+
+    if engine == "ref":
+        surv, ev = tcam_match_ref(xpad, jnp.asarray(is0np), jnp.asarray(is1np),
+                                  s, kmax)
+        return surv, ev
+
+    # pad batch and rows to block multiples; padded kmax = -1 so pad rows
+    # mismatch immediately (sliced away anyway).
+    xp = _pad_to(jnp.asarray(xpad), 0, block_b)
+    is0 = _pad_to(jnp.asarray(is0np), 0, block_r)
+    is1 = _pad_to(jnp.asarray(is1np), 0, block_r)
+    km = jnp.pad(kmax, ((0, is0.shape[0] - r), (0, 0)), constant_values=-1)
+
+    if engine == "packed":
+        xq = pack_bits(xp)
+        val = pack_bits(is1)
+        care = pack_bits(jnp.asarray(is0np | is1np))
+        care = _pad_to(care, 0, block_r)
+        surv, ev = tcam_match_packed_pallas(
+            xq, val, care, km, s=s,
+            block_b=block_b, block_r=block_r, interpret=interpret,
+        )
+    elif engine == "mxu":
+        surv, ev = tcam_match_pallas(
+            xp, is0, is1, km, s=s,
+            block_b=block_b, block_r=block_r, interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return surv[:b, :r], ev[:b, :r]
+
+
+def sa_kmax(
+    layout: TCAMLayout,
+    sa_offsets: np.ndarray,       # (R, D) sampled SA V_ref offsets
+    hw: HardwareParams = DEFAULT_HW,
+) -> np.ndarray:
+    """Lower analog SA-variability to an integer mismatch tolerance:
+    row r (division d) senses 'match' iff V_ml(mism) > V_ref(d) + offset[r,d];
+    V_ml is monotone decreasing in the mismatch count, so the analog decision
+    equals ``mism <= kmax[r, d]`` with kmax = #{k : V(k) > thresh} - 1.
+
+    kmax = -1 encodes 'always mismatch' (offset pushed V_ref above V_fm);
+    ideal hardware is kmax = 0 everywhere.
+    """
+    s, n_cwd = layout.s, layout.n_cwd
+    rows = layout.cells.shape[0]
+    used = 1 + layout.width
+    n_eff = np.array(
+        [max(0, min((d + 1) * s, used) - d * s) for d in range(n_cwd)], np.int64
+    )
+    # V(k) for k = 0..S per division (n_eff varies only in the last division)
+    ks = np.arange(s + 1)
+    kmax = np.zeros((rows, n_cwd), np.int64)
+    for d_i in range(n_cwd):
+        if n_eff[d_i] == 0:
+            kmax[:, d_i] = s  # fully masked division: always matches
+            continue
+        v = sense_voltage(ks, np.full_like(ks, n_eff[d_i]), s, hw)  # (S+1,)
+        v_fm = v[0]
+        v_1mm = sense_voltage(np.array([1]), np.array([n_eff[d_i]]), s, hw)[0]
+        v_ref = 0.5 * (v_fm + v_1mm)
+        thresh = v_ref + sa_offsets[:, d_i]          # (R,)
+        kmax[:, d_i] = (v[None, :] > thresh[:, None]).sum(axis=1) - 1
+    return kmax.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("e_row", "e_mem"))
+def _finalize(survive, evals, classes, e_row: float, e_mem: float):
+    n_survivors = survive.sum(axis=1).astype(jnp.int32)
+    first = jnp.argmax(survive, axis=1).astype(jnp.int32)
+    survivors = jnp.where(n_survivors > 0, first, -1)
+    preds = jnp.where(n_survivors > 0, classes[jnp.maximum(survivors, 0)], 0)
+    active_evals = evals.sum(axis=1)
+    energy = active_evals.astype(jnp.float32) * e_row + e_mem
+    return preds.astype(jnp.int32), survivors, n_survivors, active_evals, energy
+
+
+def tcam_infer(
+    layout: TCAMLayout,
+    xbits: np.ndarray,
+    *,
+    hw: HardwareParams = DEFAULT_HW,
+    kmax: Optional[np.ndarray] = None,
+    engine: str = "auto",
+    interpret: Optional[bool] = None,
+):
+    """JAX serving path: encoded inputs -> (predictions, survivors,
+    n_survivors, active_evals, energy_per_dec).  Functionally identical to
+    ``core.simulate.simulate`` (tested bit-exact) but runs on the Pallas
+    kernels."""
+    xpad = jnp.asarray(layout.pad_inputs(np.asarray(xbits, np.uint8)))
+    km = None if kmax is None else jnp.asarray(kmax)
+    survive, evals = tcam_match(
+        layout.cells, xpad, layout.s, km, engine=engine, interpret=interpret
+    )
+    return _finalize(
+        survive, evals, jnp.asarray(layout.classes), hw.e_row, hw.e_mem
+    )

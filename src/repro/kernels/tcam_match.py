@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: MXU-formulation ternary CAM match with selective
+precharge (DESIGN.md §2).
+
+Hardware mapping of the paper's ReCAM array:
+  * one column division (width S)  -> one grid step along the innermost
+    (sequential) grid axis; TPU grids execute sequentially so the carried
+    ``active`` block implements selective precharge *for free*,
+  * match-line evaluation          -> two MXU matmuls per division:
+    ``mism = X·is0ᵀ + (1-X)·is1ᵀ`` (a don't-care cell sets neither plane and
+    contributes nothing — exactly the TCAM semantics),
+  * sense-amp threshold            -> ``mism <= kmax[row, division]``
+    (kmax = 0 is ideal hardware; per-SA reference-voltage offsets lower to a
+    precomputed integer tolerance, keeping the analog model out of the hot
+    loop),
+  * row-parallel tiles             -> the (batch-block × row-block) grid axes.
+
+Block shapes: X (Bb, S) · is0ᵀ (S, Rb) with Bb = Rb = 128 default — MXU-sized
+operands; the S (contraction) dimension is the physical TCAM row width, a
+power of two in {16..128} by Table IV, zero-padded to 128 lanes by Mosaic
+when smaller.
+
+Outputs are revisited accumulator blocks (index map ignores the sequential
+axis), so the carry lives in VMEM without explicit scratch:
+  active (B, R) int32 — after the last division: survive mask,
+  evals  (B, R) int32 — number of divisions the row was evaluated in.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tcam_match_pallas"]
+
+
+def _kernel(x_ref, is0_ref, is1_ref, kmax_ref, active_ref, evals_ref):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        active_ref[...] = jnp.ones_like(active_ref)
+        evals_ref[...] = jnp.zeros_like(evals_ref)
+
+    x = x_ref[...]                                    # (Bb, S) f32 {0,1}
+    # Two MXU matmuls; f32 accumulation is exact (counts <= S).
+    mism = jnp.dot(
+        x, is0_ref[...].T, preferred_element_type=jnp.float32
+    ) + jnp.dot(1.0 - x, is1_ref[...].T, preferred_element_type=jnp.float32)
+    match = (mism <= kmax_ref[...].T.astype(jnp.float32)).astype(jnp.int32)
+
+    act = active_ref[...]                             # carried across d
+    evals_ref[...] += act                             # active => evaluated
+    active_ref[...] = act * match                     # selective precharge
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s", "block_b", "block_r", "interpret")
+)
+def tcam_match_pallas(
+    xbits: jax.Array,           # (B, W) — {0,1}, any dtype
+    is0: jax.Array,             # (R, W)
+    is1: jax.Array,             # (R, W)
+    kmax: jax.Array,            # (R, D) int32  (D = W // s)
+    *,
+    s: int,
+    block_b: int = 128,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (survive (B,R) int32, evals (B,R) int32).  B % block_b == 0,
+    R % block_r == 0, W % s == 0 — callers pad via ``ops.tcam_match``."""
+    b, w = xbits.shape
+    r = is0.shape[0]
+    assert w % s == 0 and b % block_b == 0 and r % block_r == 0, (b, r, w, s)
+    d = w // s
+    assert kmax.shape == (r, d), (kmax.shape, (r, d))
+
+    x = xbits.astype(jnp.float32)
+    p0 = is0.astype(jnp.float32)
+    p1 = is1.astype(jnp.float32)
+
+    grid = (b // block_b, r // block_r, d)
+    survive, evals = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, s), lambda i, j, k: (i, k)),    # x
+            pl.BlockSpec((block_r, s), lambda i, j, k: (j, k)),    # is0
+            pl.BlockSpec((block_r, s), lambda i, j, k: (j, k)),    # is1
+            pl.BlockSpec((block_r, 1), lambda i, j, k: (j, k)),    # kmax
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_r), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_r), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, p0, p1, kmax.astype(jnp.int32))
+    return survive, evals

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: bit-packed ternary CAM match (VPU formulation).
+
+Beyond-paper optimization for the memory-bound regime (DESIGN.md §2): the
+MXU kernel streams f32 bitplanes (8 bytes/cell for both planes); this kernel
+packs 32 cells into one uint32 word per plane (1/16 the bytes), and replaces
+the matmuls with XOR/AND + ``lax.population_count`` on the VPU:
+
+    mism[b, r] = Σ_w popcount((x[b, w] ^ val[r, w]) & care[r, w])
+
+The selective-precharge carry and grid layout are identical to
+``tcam_match.py``.  CELL_MM (SAF-induced always-mismatch) is not
+representable packed — ``ops.tcam_match`` falls back to the MXU kernel when
+the LUT contains MM cells.
+
+The word loop is a static Python unroll (S/32 <= 4 words per division for
+Table IV sizes) of (Bb × Rb) broadcast compares — fully vectorized on the
+8x128 VPU lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tcam_match_packed_pallas"]
+
+
+def _kernel(sw: int, x_ref, val_ref, care_ref, kmax_ref, active_ref, evals_ref):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        active_ref[...] = jnp.ones_like(active_ref)
+        evals_ref[...] = jnp.zeros_like(evals_ref)
+
+    mism = jnp.zeros(active_ref.shape, jnp.int32)
+    for w in range(sw):  # static unroll: S/32 words per division
+        xw = x_ref[:, w][:, None]          # (Bb, 1) uint32
+        vw = val_ref[:, w][None, :]        # (1, Rb) uint32
+        cw = care_ref[:, w][None, :]
+        diff = (xw ^ vw) & cw              # (Bb, Rb)
+        mism += jax.lax.population_count(diff).astype(jnp.int32)
+
+    match = (mism <= kmax_ref[...].T).astype(jnp.int32)
+    act = active_ref[...]
+    evals_ref[...] += act
+    active_ref[...] = act * match
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s", "block_b", "block_r", "interpret")
+)
+def tcam_match_packed_pallas(
+    xpacked: jax.Array,        # (B, W32) uint32
+    val: jax.Array,            # (R, W32) uint32
+    care: jax.Array,           # (R, W32) uint32
+    kmax: jax.Array,           # (R, D) int32, D = W32 // (s // 32)
+    *,
+    s: int,                    # division width in bits (multiple of 32)
+    block_b: int = 256,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, w32 = xpacked.shape
+    r = val.shape[0]
+    assert s % 32 == 0
+    sw = s // 32
+    assert w32 % sw == 0 and b % block_b == 0 and r % block_r == 0
+    d = w32 // sw
+    assert kmax.shape == (r, d), (kmax.shape, (r, d))
+
+    grid = (b // block_b, r // block_r, d)
+    kern = functools.partial(_kernel, sw)
+    survive, evals = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, sw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_r, sw), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_r, sw), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_r, 1), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_r), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_r), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xpacked, val, care, kmax.astype(jnp.int32))
+    return survive, evals

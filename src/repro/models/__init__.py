@@ -1,0 +1,23 @@
+"""LM substrate: model definitions for the assigned architectures.
+
+Pure-functional JAX (no framework): params are pytrees of jnp arrays with a
+parallel pytree of logical-axis names (see ``repro.sharding``).  Layer stacks
+run as ``lax.scan`` over repeating *super-blocks* so heterogeneous
+architectures (jamba's 1:7 mamba/attention interleave with alternating MoE)
+compile to small HLO.
+"""
+from .config import ARCH_FAMILIES, ModelConfig
+from .lm import (
+    decode_step,
+    forward,
+    init_cache,
+    loss_fn,
+    prefill,
+)
+from .params import init_params, param_count, param_logical_axes
+
+__all__ = [
+    "ARCH_FAMILIES", "ModelConfig",
+    "decode_step", "forward", "init_cache", "loss_fn", "prefill",
+    "init_params", "param_count", "param_logical_axes",
+]

@@ -1,0 +1,130 @@
+"""Attention: chunked online-softmax ("jnp-flash") for train/prefill, plus a
+single-query decode path over KV caches (full or sliding-window ring).
+
+The chunked formulation never materializes the (Sq, Sk) score matrix —
+peak memory is O(q_chunk · kv_chunk) per head group — which is what lets the
+32k prefill and 500k decode cells fit HBM at compile time.
+
+Known waste (recorded for §Perf): causal masking is applied to full block
+products, so causal attention executes ~2x the minimal FLOPs; triangular
+block scheduling is a hillclimb item.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+__all__ = ["flash_attention", "decode_attention"]
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,            # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,         # >0: sliding-window attention
+    q_offset: int = 0,       # absolute position of q[0] (prefill continuation)
+    prefix_len: int = 0,     # bidirectional prefix (paligemma image tokens)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+
+    def _fit(n, want):  # largest divisor of n that is <= want
+        c = min(want, n)
+        while n % c:
+            c -= 1
+        return c
+
+    q_chunk = _fit(sq, q_chunk)
+    kv_chunk = _fit(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = hd ** -0.5
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, kv_chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint  # backward recomputes per q-chunk: O(q_chunk·Sk) peak,
+    def q_step(_, qi_idx_and_q):  # not O(Sq·Sk) — required for 32k+ cells
+        qi_idx, qi = qi_idx_and_q
+        q_pos = q_offset + qi_idx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_idx_and_kv):
+            m, l, acc = carry
+            kj_idx, kj, vj = kj_idx_and_kv
+            kv_pos = kj_idx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqkgh,bskh->bqkgs", qi.astype(jnp.float32),
+                kj.astype(jnp.float32),
+            ) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                c = kv_pos[None, :] <= q_pos[:, None]
+                if prefix_len > 0:
+                    c |= kv_pos[None, :] < prefix_len
+                mask &= c
+            if window > 0:
+                w = kv_pos[None, :] > q_pos[:, None] - window
+                if prefix_len > 0:
+                    w |= kv_pos[None, :] < prefix_len
+                mask &= w
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskh->bqkgh", p, vj.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, q_chunk, kv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kv, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    # (nq, B, qc, kv, g, hd) -> (B, Sq, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, hd) — one new token
+    cache_k: jax.Array,      # (B, S, KV, hd) — RoPE applied at write time
+    cache_v: jax.Array,      # (B, S, KV, hd)
+    slot_pos: jax.Array,     # (S,) int32 absolute position per slot, -1 empty
+    pos: jax.Array,          # scalar int32 — position of the new token
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    _, s, kv, _ = cache_k.shape
+    g = h // kv
+    scale = hd ** -0.5
+    qg = q.reshape(b, kv, g, hd)
+    # keep cache operands in their storage dtype (bf16) with f32 accumulation:
+    # casting the cache would materialize a full f32 copy (2x decode HBM)
+    s_ = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, cache_k,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window > 0:
+        valid &= slot_pos > pos - window
+    s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Common layers: norms, RoPE, dense MLPs, initializers.
+
+Compute dtype is bf16 (params f32, cast at use); norms and softmax statistics
+run in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+
+__all__ = [
+    "rms_norm", "nonparam_norm", "rope", "rope_table", "mlp",
+    "dense_init", "COMPUTE_DTYPE",
+]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key: jax.Array, shape, in_axis: int = 0,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def nonparam_norm(x: jax.Array, eps: float) -> jax.Array:
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def rope_table(positions: jax.Array, head_dim: int,
+               theta: float) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) tables, f32, shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Apply rotary embedding; x: (..., seq, heads, head_dim); sin/cos:
+    (..., seq, head_dim//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    """Gated MLP (SwiGLU / GeGLU): (w_gate, w_up) -> act(g) * u -> w_down."""
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt))
+    g = shard(g, "act_batch", "act_seq", "act_mlp")
+    u = shard(u, "act_batch", "act_seq", "act_mlp")
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dt))
+    return shard(out, "act_batch", "act_seq", "act_embed")

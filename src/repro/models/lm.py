@@ -1,0 +1,491 @@
+"""The model stack: train forward / chunked loss / prefill / decode for every
+assigned architecture family.
+
+Layers execute as a ``lax.scan`` over repeating *super-blocks*
+(``cfg.pattern``): each scan step applies one full pattern instance (e.g.
+jamba's 8-layer mamba/attention/MoE interleave) with per-kind stacked params
+sliced by the scan — heterogeneous stacks compile to one small HLO body.
+
+Modes:
+  forward     — full-sequence activations (training; no cache I/O),
+  prefill     — full sequence, emits KV caches / SSM states + last logits,
+  decode_step — one token against the caches (the ``serve_step`` the dry-run
+                lowers for decode_32k / long_500k cells).
+
+KV caches are ring buffers (slot = pos % cache_len) with a per-slot absolute
+position table, which unifies full-window and sliding-window (SWA) decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import current_rules, shard
+from .attention import decode_attention, flash_attention
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, mlp, nonparam_norm, rms_norm, rope, rope_table
+from .mamba import init_mamba_state, mamba_mixer
+from .moe import moe_ffn
+from .rwkv import init_rwkv_state, rwkv_channel_mix, rwkv_mixer
+
+__all__ = ["forward", "loss_fn", "prefill", "decode_step", "init_cache",
+           "encode_audio"]
+
+
+@dataclasses.dataclass
+class Ctx:
+    mode: str                      # "full" | "prefill" | "decode"
+    sin: jax.Array | None = None   # rope tables for the current positions
+    cos: jax.Array | None = None
+    pos: Any = None                # decode: scalar position of the new token
+    seq_len: int = 0               # full/prefill: sequence length
+    prefix_len: int = 0
+    enc_out: jax.Array | None = None   # encdec: encoder activations
+    causal: bool = True
+
+
+def _norm(x, scale, cfg: ModelConfig):
+    if cfg.norm_type == "nonparam":
+        return nonparam_norm(x, cfg.norm_eps)
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+def _qk_headnorm(q, p, cfg, name):
+    if not cfg.qk_norm:
+        return q
+    return rms_norm(q, p[name], cfg.norm_eps)
+
+
+def _cache_len(cfg: ModelConfig, mixer: str, max_seq: int) -> int:
+    if mixer == "swa" and cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+# ---------------------------------------------------------------------------
+# mixers
+# ---------------------------------------------------------------------------
+def _attention_mixer(kind, h, p, cfg: ModelConfig, ctx: Ctx, cache):
+    mixer = kind.split("+")[0]
+    window = cfg.sliding_window if mixer == "swa" else 0
+    b, s, d = h.shape
+    nh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = h.dtype
+    x = _norm(h, p["norm1"], cfg)
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(dt)).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
+    q = _qk_headnorm(q, p, cfg, "q_norm")
+    k = _qk_headnorm(k, p, cfg, "k_norm")
+    if cfg.rope_theta > 0:
+        q = rope(q, ctx.sin, ctx.cos)
+        k = rope(k, ctx.sin, ctx.cos)
+
+    new_cache = cache
+    if ctx.mode == "full":
+        o = flash_attention(q, k, v, causal=ctx.causal, window=window,
+                            prefix_len=ctx.prefix_len)
+    elif ctx.mode == "prefill":
+        o = flash_attention(q, k, v, causal=ctx.causal, window=window,
+                            prefix_len=ctx.prefix_len)
+        clen = cache["k"].shape[1]
+        keep = min(s, clen)
+        pos_keep = jnp.arange(keep) + (s - keep)
+        slots = pos_keep % clen
+        k_c = cache["k"].at[:, slots].set(
+            k[:, s - keep:].astype(cache["k"].dtype))
+        v_c = cache["v"].at[:, slots].set(
+            v[:, s - keep:].astype(cache["v"].dtype))
+        sp = cache["slot_pos"].at[slots].set(pos_keep.astype(jnp.int32))
+        k_c = shard(k_c, "act_batch", "cache_seq", "act_kv_heads", "act_hd")
+        v_c = shard(v_c, "act_batch", "cache_seq", "act_kv_heads", "act_hd")
+        new_cache = dict(cache, k=k_c, v=v_c, slot_pos=sp)
+    else:  # decode
+        clen = cache["k"].shape[1]
+        slot = ctx.pos % clen
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        sp = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], ctx.pos.astype(jnp.int32)[None], slot, axis=0)
+        k_c = shard(k_c, "act_batch", "cache_seq", "act_kv_heads", "act_hd")
+        v_c = shard(v_c, "act_batch", "cache_seq", "act_kv_heads", "act_hd")
+        new_cache = dict(cache, k=k_c, v=v_c, slot_pos=sp)
+        o = decode_attention(q, k_c, v_c, sp, ctx.pos, window=window)
+
+    o = o.reshape(b, s, nh * hd)
+    out = jnp.einsum("bsq,qd->bsd", o, p["wo"].astype(dt))
+    return h + shard(out, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def _cross_mixer(h, p, cfg: ModelConfig, ctx: Ctx, cache):
+    """Whisper decoder cross-attention over encoder outputs."""
+    b, s, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    dt = h.dtype
+    x = _norm(h, p["norm_x"], cfg)
+    q = jnp.einsum("bsd,dq->bsq", x, p["xwq"].astype(dt)).reshape(b, s, nh, hd)
+    new_cache = cache
+    if ctx.mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+        sp = jnp.arange(xk.shape[1], dtype=jnp.int32)
+        o = decode_attention(q, xk, xv, sp, jnp.int32(2**30))
+    else:
+        enc = ctx.enc_out
+        xk = jnp.einsum("bsd,dq->bsq", enc, p["xwk"].astype(dt)).reshape(
+            b, enc.shape[1], nh, hd)
+        xv = jnp.einsum("bsd,dq->bsq", enc, p["xwv"].astype(dt)).reshape(
+            b, enc.shape[1], nh, hd)
+        o = flash_attention(q, xk, xv, causal=False)
+        if ctx.mode == "prefill":
+            new_cache = dict(cache, xk=xk.astype(cache["xk"].dtype),
+                             xv=xv.astype(cache["xv"].dtype))
+    o = o.reshape(b, s, nh * hd)
+    out = jnp.einsum("bsq,qd->bsd", o, p["xwo"].astype(dt))
+    return h + shard(out, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def _apply_block(kind, h, p, cfg: ModelConfig, ctx: Ctx, cache):
+    mixer, ffn = kind.split("+")
+    new_cache = dict(cache) if cache is not None else None
+
+    if mixer in ("attn", "swa"):
+        h, new_cache = _attention_mixer(kind, h, p, cfg, ctx, new_cache)
+    elif mixer == "mamba":
+        st = ((new_cache["conv"], new_cache["h"])
+              if ctx.mode != "full" else None)
+        x = _norm(h, p["norm1"], cfg)
+        if ctx.mode == "full":
+            h = h + mamba_mixer(x, p, cfg)
+        else:
+            out, (conv, hst) = mamba_mixer(x, p, cfg, state=st,
+                                           return_state=True)
+            h = h + out
+            new_cache = dict(new_cache, conv=conv.astype(new_cache["conv"].dtype),
+                             h=hst)
+    elif mixer == "rwkv":
+        x = _norm(h, p["norm1"], cfg)
+        if ctx.mode == "full":
+            h = h + rwkv_mixer(x, p, cfg)
+        else:
+            st = (new_cache["xa"].astype(x.dtype), new_cache["S"])
+            out, (xa, sst) = rwkv_mixer(x, p, cfg, state=st, return_state=True)
+            h = h + out
+            new_cache = dict(new_cache, xa=xa.astype(new_cache["xa"].dtype),
+                             S=sst)
+    else:
+        raise ValueError(mixer)
+
+    if cfg.is_encdec:
+        h, new_cache = _cross_mixer(h, p, cfg, ctx, new_cache)
+
+    x = _norm(h, p["norm2"], cfg)
+    if ffn == "mlp":
+        h = h + mlp(x, p, cfg.mlp_act)
+    elif ffn == "moe":
+        h = h + moe_ffn(x, p, cfg)
+    elif ffn == "cmix":
+        if ctx.mode == "full":
+            h = h + rwkv_channel_mix(x, p, cfg)
+        else:
+            out, xc = rwkv_channel_mix(x, p, cfg,
+                                       state=new_cache["xc"].astype(x.dtype),
+                                       return_state=True)
+            h = h + out
+            new_cache = dict(new_cache, xc=xc.astype(new_cache["xc"].dtype))
+    else:
+        raise ValueError(ffn)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FSDP gather-at-use (ZeRO-3): inside the layer scan, re-annotate each weight
+# with its FSDP ("embed"/data) dim UNSHARDED while keeping the TP dims.
+# GSPMD then all-gathers the *weight* once per layer (weight-sized comm)
+# instead of all-reducing *activation*-sized partial sums — measured 50x+
+# lower collective bytes on the train cells (EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+_FSDP_DIMS = frozenset({"embed"})
+_TP_DIMS = frozenset({"qkv", "mlp", "experts", "vocab", "dinner"})
+
+
+def _gather_axes(axes: tuple, gather_tp: bool) -> tuple:
+    drop = _FSDP_DIMS | (_TP_DIMS if gather_tp else frozenset())
+    return tuple(None if a in drop else a for a in axes)
+
+
+def _gather_fsdp(params, axes_tree):
+    rules = current_rules()
+    if rules is None or not rules.table.get("_gather_tp"):
+        # TP-mapped archs: leave weight resharding to GSPMD (forcing
+        # gathered copies regressed qwen3/jamba by 4-8 GiB — §Perf log)
+        return params
+    return jax.tree.map(
+        lambda ax, w: shard(w, *_gather_axes(ax, True)),
+        axes_tree, params,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# the super-block scan
+# ---------------------------------------------------------------------------
+def _reshape_stacks(cfg: ModelConfig, tree: dict) -> dict:
+    """{kind: leaves (total_occ, ...)} -> leaves (n_repeat, occ_k, ...)."""
+    out = {}
+    for kind, leaves in tree.items():
+        occ = len(cfg.kind_positions(kind))
+        out[kind] = jax.tree.map(
+            lambda a: a.reshape(cfg.n_repeat, occ, *a.shape[1:]), leaves)
+    return out
+
+
+def _scan_blocks(cfg: ModelConfig, params_blocks, caches, h, ctx: Ctx,
+                 remat: str = "none"):
+    pattern = cfg.pattern
+    p_xs = _reshape_stacks(cfg, params_blocks)
+    c_xs = None if caches is None else _reshape_stacks(cfg, caches)
+    from .params import kind_specs
+    gather_axes = {
+        kind: {name: spec[1] for name, spec in
+               kind_specs(cfg, kind, with_cross=cfg.is_encdec).items()}
+        for kind in params_blocks
+    }
+
+    occ_per = {kind: len(cfg.kind_positions(kind)) for kind in params_blocks}
+
+    if caches is None:
+        def body(h, p_sl):
+            counters = {k: 0 for k in p_sl}
+            for kind in pattern:
+                i = counters[kind]
+                counters[kind] += 1
+                p_i = jax.tree.map(lambda a: a[i], p_sl[kind])
+                p_i = _gather_fsdp(p_i, gather_axes[kind])
+                h, _ = _apply_block(kind, h, p_i, cfg, ctx, None)
+            return h, None
+
+        if remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif remat == "full":
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, p_xs)
+        return h, None
+
+    # Caches are CARRIED (not scanned xs->ys): each step dynamic-updates its
+    # layer slice in place, so the loop aliases one cache buffer instead of
+    # accumulating a second stacked copy (2x+ decode HBM otherwise).
+    def body_c(carry, xs_t):
+        h, cstack = carry
+        r, p_sl = xs_t
+        counters = {k: 0 for k in p_sl}
+        for kind in pattern:
+            i = counters[kind]
+            counters[kind] += 1
+            p_i = jax.tree.map(lambda a: a[i], p_sl[kind])
+            p_i = _gather_fsdp(p_i, gather_axes[kind])
+            idx = r * occ_per[kind] + i
+            c_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, idx, 0, keepdims=False), cstack[kind])
+            h, c_out = _apply_block(kind, h, p_i, cfg, ctx, c_i)
+            cstack = dict(cstack, **{kind: jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), idx, 0),
+                cstack[kind], c_out)})
+        return (h, cstack), None
+
+    (h, new_caches), _ = jax.lax.scan(
+        body_c, (h, caches), (jnp.arange(cfg.n_repeat), p_xs))
+    return h, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def _embed(params, cfg: ModelConfig, tokens, frontend=None):
+    table = shard(params["embed"], "vocab", None)     # gather the FSDP dim
+    h = table[tokens].astype(COMPUTE_DTYPE)
+    if cfg.emb_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
+    if frontend is not None:
+        h = jnp.concatenate([frontend.astype(COMPUTE_DTYPE), h], axis=1)
+    return shard(h, "act_batch", "act_seq", "act_embed")
+
+
+def _logits(params, cfg: ModelConfig, h):
+    w = (shard(params["embed"], "vocab", None).T if cfg.tie_embeddings
+         else shard(params["lm_head"], None, "vocab"))
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def _rope_tables(cfg: ModelConfig, positions):
+    if cfg.rope_theta <= 0:
+        return None, None
+    return rope_table(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def encode_audio(params, cfg: ModelConfig, frames, remat: str = "full"):
+    """Whisper encoder: frames are stub frontend embeddings (B, S_enc, D)."""
+    enc = params["encoder"]
+    h = frames.astype(COMPUTE_DTYPE) + enc["pos_emb"][None].astype(COMPUTE_DTYPE)
+    h = shard(h, "act_batch", "act_seq", "act_embed")
+    cfg_enc = dataclasses.replace(cfg, encoder_layers=0,
+                                  n_layers=cfg.encoder_layers,
+                                  pattern=("attn+mlp",))
+    ctx = Ctx(mode="full", causal=False, seq_len=h.shape[1])
+    sin, cos = _rope_tables(cfg, jnp.arange(h.shape[1]))
+    ctx.sin, ctx.cos = sin, cos
+    h, _ = _scan_blocks(cfg_enc, enc["blocks"], None, h, ctx, remat=remat)
+    return _norm(h, enc["final_norm"], cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frontend=None, frames=None,
+            remat: str = "dots"):
+    """Full-sequence activations -> logits (training / evaluation)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode_audio(params, cfg, frames, remat=remat)
+    h = _embed(params, cfg, tokens, frontend)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    sin, cos = _rope_tables(cfg, positions)
+    if cfg.is_encdec:
+        h = h + params["dec_pos_emb"][None, :s].astype(h.dtype)
+    ctx = Ctx(mode="full", sin=sin, cos=cos, seq_len=s,
+              prefix_len=cfg.frontend_tokens, enc_out=enc_out)
+    h, _ = _scan_blocks(cfg, params["blocks"], None, h, ctx, remat=remat)
+    h = _norm(h, params["final_norm"], cfg)
+    return _logits(params, cfg, h)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: str = "dots",
+            loss_chunk: int = 1024):
+    """Next-token CE with seq-chunked logits (peak memory ~ B×chunk×V)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode_audio(params, cfg, batch["frames"], remat=remat)
+    h = _embed(params, cfg, batch["tokens"], batch.get("patches"))
+    s = h.shape[1]
+    sin, cos = _rope_tables(cfg, jnp.arange(s))
+    if cfg.is_encdec:
+        h = h + params["dec_pos_emb"][None, :s].astype(h.dtype)
+    ctx = Ctx(mode="full", sin=sin, cos=cos, seq_len=s,
+              prefix_len=cfg.frontend_tokens, enc_out=enc_out)
+    h, _ = _scan_blocks(cfg, params["blocks"], None, h, ctx, remat=remat)
+    h = _norm(h, params["final_norm"], cfg)
+
+    labels = batch["labels"]
+    if cfg.frontend_tokens:
+        # frontend positions carry no next-token loss
+        pad = jnp.full((labels.shape[0], cfg.frontend_tokens), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    w = (shard(params["embed"], "vocab", None).T if cfg.tie_embeddings
+         else shard(params["lm_head"], None, "vocab"))
+    chunk = min(loss_chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    b = h.shape[0]
+    h_c = h.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(hc, lc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, w.astype(hc.dtype))
+        logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lc >= 0
+        return ((lse - gold) * valid).sum(), valid.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        loss, n = chunk_loss(*xs)
+        return (tot + loss, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (h_c, l_c))
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss, {"loss": loss, "tokens": cnt}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=COMPUTE_DTYPE) -> dict:
+    """Stacked per-kind decode caches (see module docstring)."""
+    caches = {}
+    nh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    for kind in cfg.kinds:
+        occ = len(cfg.kind_positions(kind)) * cfg.n_repeat
+        mixer = kind.split("+")[0]
+        leaves: dict = {}
+        if mixer in ("attn", "swa"):
+            clen = _cache_len(cfg, mixer, max_seq)
+            leaves["k"] = jnp.zeros((occ, batch, clen, kv, hd), dtype)
+            leaves["v"] = jnp.zeros((occ, batch, clen, kv, hd), dtype)
+            leaves["slot_pos"] = jnp.full((occ, clen), -1, jnp.int32)
+        elif mixer == "mamba":
+            conv, hst = init_mamba_state(cfg, batch, dtype)
+            leaves["conv"] = jnp.tile(conv[None], (occ, 1, 1, 1))
+            leaves["h"] = jnp.tile(hst[None], (occ, 1, 1, 1))
+        elif mixer == "rwkv":
+            xa, sst, xc = init_rwkv_state(cfg, batch, dtype)
+            leaves["xa"] = jnp.tile(xa[None], (occ, 1, 1))
+            leaves["S"] = jnp.tile(sst[None], (occ, 1, 1, 1, 1))
+            leaves["xc"] = jnp.tile(xc[None], (occ, 1, 1))
+        if kind.split("+")[1] == "cmix" and "xc" not in leaves:
+            leaves["xc"] = jnp.zeros((occ, batch, cfg.d_model), dtype)
+        if cfg.is_encdec:
+            leaves["xk"] = jnp.zeros((occ, batch, cfg.encoder_seq, nh, hd),
+                                     dtype)
+            leaves["xv"] = jnp.zeros((occ, batch, cfg.encoder_seq, nh, hd),
+                                     dtype)
+        caches[kind] = leaves
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches, *, frontend=None,
+            frames=None):
+    """Full-sequence forward that fills the caches; returns (last-token
+    logits, caches)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode_audio(params, cfg, frames)
+    h = _embed(params, cfg, tokens, frontend)
+    s = h.shape[1]
+    sin, cos = _rope_tables(cfg, jnp.arange(s))
+    if cfg.is_encdec:
+        h = h + params["dec_pos_emb"][None, :s].astype(h.dtype)
+    ctx = Ctx(mode="prefill", sin=sin, cos=cos, seq_len=s,
+              prefix_len=cfg.frontend_tokens, enc_out=enc_out)
+    h, caches = _scan_blocks(cfg, params["blocks"], caches, h, ctx)
+    h = _norm(h, params["final_norm"], cfg)
+    return _logits(params, cfg, h[:, -1:]), caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """One decode step: token (B, 1) int32, pos scalar int32 -> (logits
+    (B, 1, V), new caches)."""
+    h = _embed(params, cfg, token)
+    sin, cos = _rope_tables(cfg, pos[None].astype(jnp.int32))
+    if cfg.is_encdec:
+        pe = jax.lax.dynamic_slice_in_dim(params["dec_pos_emb"], pos, 1, 0)
+        h = h + pe[None].astype(h.dtype)
+    ctx = Ctx(mode="decode", sin=sin, cos=cos, pos=pos)
+    h, caches = _scan_blocks(cfg, params["blocks"], caches, h, ctx)
+    h = _norm(h, params["final_norm"], cfg)
+    return _logits(params, cfg, h), caches

@@ -1,0 +1,141 @@
+"""Mamba selective-SSM mixer (jamba's attention-free layers).
+
+Training/prefill runs a *chunked* selective scan: the sequence is processed
+in chunks (outer ``lax.scan``) carrying the (B, d_inner, N) state; inside a
+chunk the recurrence is a plain time scan.  The chunk structure bounds the
+materialized (B, chunk, d_inner, N) discretized tensors — the full-sequence
+(B, S, d_inner, N) form would be tens of GB at 4k+ sequence lengths.
+
+Decode is the single-token state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+
+__all__ = ["mamba_mixer", "mamba_decode", "init_mamba_state"]
+
+CHUNK = 256
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv along seq.  x (B,S,Di), w (Di,K), b (Di,);
+    prev (B,K-1,Di) carries context across prefill->decode."""
+    bsz, s, di = x.shape
+    k = w.shape[1]
+    if prev is None:
+        prev = jnp.zeros((bsz, k - 1, di), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                 # (B, S+K-1, Di)
+    out = jnp.zeros((bsz, s, di), jnp.float32)
+    for i in range(k):                                      # K=4 static unroll
+        out = out + xp[:, i : i + s, :].astype(jnp.float32) * w[:, i].astype(
+            jnp.float32
+        )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_chunk(h0: jax.Array, dA: jax.Array, dBx: jax.Array,
+               cmat: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One chunk of the recurrence h_t = dA_t * h_{t-1} + dBx_t.
+
+    h0 (B, Di, N); dA/dBx (B, C, Di, N); cmat (B, C, N).
+    Returns (h_final, y (B, C, Di))."""
+
+    def step(h, t):
+        da_t, dbx_t, c_t = t
+        h = da_t * h + dbx_t                                # (B, Di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+          cmat.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys.transpose(1, 0, 2)                         # (B, C, Di)
+
+
+def _ssm(x: jax.Array, p: dict, cfg: ModelConfig,
+         h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Selective scan over the full sequence in CHUNK pieces.
+    x (B, S, Di) post-conv activations; returns (y (B,S,Di), h_final)."""
+    bsz, s, di = x.shape
+    n = cfg.ssm_state
+    dtr = cfg.dt_rank
+    xf = x.astype(jnp.float32)
+
+    xdb = jnp.einsum("bsd,dk->bsk", xf, p["x_proj"].astype(jnp.float32))
+    dt, bmat, cmat = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt, p["dt_w"].astype(jnp.float32))
+        + p["dt_b"].astype(jnp.float32)
+    )                                                        # (B, S, Di)
+    dt = shard(dt, "act_batch", "act_seq", "act_dinner")
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))             # (Di, N)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    chunk = min(CHUNK, s)
+    while s % chunk:            # largest divisor of s that is <= CHUNK
+        chunk -= 1
+    nc = s // chunk
+
+    @jax.checkpoint  # recompute per chunk: peak = one chunk's (B,C,Di,N)
+    def outer(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(bmat), sl(cmat), sl(xf)
+        da = jnp.exp(dt_c[..., None] * a[None, None])        # (B,C,Di,N)
+        dbx = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+        h, y = _ssm_chunk(h, da, dbx, c_c)
+        return h, y
+
+    h, ys = jax.lax.scan(outer, h0, jnp.arange(nc))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    y = y + xf * p["Dskip"].astype(jnp.float32)[None, None]
+    return y.astype(x.dtype), h
+
+
+def mamba_mixer(
+    x: jax.Array,              # (B, S, D) post-norm residual stream
+    p: dict,
+    cfg: ModelConfig,
+    state: tuple | None = None,   # (conv_prev (B,K-1,Di), h (B,Di,N))
+    return_state: bool = False,
+):
+    dt = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt))
+    xin, z = jnp.split(xz, 2, axis=-1)                       # (B,S,Di) each
+    xin = shard(xin, "act_batch", "act_seq", "act_dinner")
+    conv_prev = state[0] if state is not None else None
+    h0 = state[1] if state is not None else None
+    xc = jax.nn.silu(_conv_causal(xin, p["conv_w"], p["conv_b"], conv_prev))
+    y, h = _ssm(xc, p, cfg, h0)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt))
+    out = shard(out, "act_batch", "act_seq", "act_embed")
+    if return_state:
+        k = cfg.ssm_conv
+        if conv_prev is None:
+            conv_prev = jnp.zeros(
+                (x.shape[0], k - 1, xin.shape[-1]), xin.dtype
+            )
+        hist = jnp.concatenate([conv_prev, xin], axis=1)     # (B, S+K-1, Di)
+        new_conv = hist[:, hist.shape[1] - (k - 1):, :]
+        return out, (new_conv, h)
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return (
+        jnp.zeros((batch, k - 1, di), dtype),
+        jnp.zeros((batch, di, n), jnp.float32),
+    )
+
+
+def mamba_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: tuple):
+    """Single-token decode: x (B, 1, D) -> (out (B,1,D), new state)."""
+    out, new_state = mamba_mixer(x, p, cfg, state=state, return_state=True)
+    return out, new_state

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded scatter/gather
+dispatch (no giant one-hot dispatch einsums), expert-parallel over the
+"model" mesh axis.
+
+Dispatch: tokens are ranked within their chosen expert via a sort-free
+cumulative-position trick; tokens beyond an expert's capacity
+``C = ceil(cf * T * k / E)`` are dropped (standard GShard/Switch semantics).
+The (E, C, D) expert buffer is the only materialized dispatch structure:
+bytes = E*C*D ~= cf * k * tokens * d_model, independent of E.
+
+``router="tcam_dt"`` (beyond-paper, DESIGN.md §4): routing decisions come
+from a decision tree compiled to a ternary LUT by the paper's DT-HW compiler
+and evaluated with the TCAM bitplane match — see ``tcam_router.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+
+__all__ = ["moe_ffn", "capacity"]
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token
+            / cfg.n_experts + 0.999)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def _positions_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each dispatch within its expert (stable, order-preserving).
+
+    Equivalent to grouping by expert and numbering arrivals; computed with a
+    sort + inverse permutation (O(n log n), no (T, E) one-hot)."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_ffn(
+    x: jax.Array,                 # (B, S, D)
+    p: dict,                      # w_router (D,E), w_gate/w_up (E,D,F), w_down (E,F,D)
+    cfg: ModelConfig,
+    *,
+    router_bits: dict | None = None,   # tcam_dt router arrays (see tcam_router)
+) -> jax.Array:
+    b, s, d = x.shape
+    t = b * s
+    g = cfg.moe_groups if (b * s) % cfg.moe_groups == 0 else 1  # decode: t=B
+    if g > 1:
+        # GShard-style token groups: route/dispatch/compute one group at a
+        # time (checkpointed scan) — dispatch transients scale 1/g.
+        xg = x.reshape(g, t // g, 1, d)
+
+        @jax.checkpoint
+        def one(_, xc):
+            return None, _moe_group(xc, p, cfg, router_bits)
+
+        _, yg = jax.lax.scan(one, None, xg)
+        return yg.reshape(b, s, d)
+    return _moe_group(x.reshape(t, 1, d), p, cfg, router_bits).reshape(b, s, d)
+
+
+def _moe_group(
+    x: jax.Array,                 # (T, 1, D) — one token group
+    p: dict,
+    cfg: ModelConfig,
+    router_bits: dict | None = None,
+) -> jax.Array:
+    t, _, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    f = cfg.expert_ff
+    dt = x.dtype
+    xt = x.reshape(t, d)
+
+    if cfg.router == "tcam_dt":
+        from .tcam_router import route_tcam
+        assert router_bits is not None, "tcam_dt router needs compiled bits"
+        top_i = route_tcam(xt, router_bits)[:, None]        # (T, 1) top-1
+        top_w = jnp.ones((t, 1), jnp.float32)
+        k = 1
+    else:
+        logits = jnp.einsum(
+            "td,de->te", xt.astype(jnp.float32),
+            p["w_router"].astype(jnp.float32),
+        )
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(gates, k)              # (T, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    c = capacity(cfg, t)
+    flat_e = top_i.reshape(-1).astype(jnp.int32)            # (T*k,)
+    pos = _positions_in_expert(flat_e, e)
+    keep = pos < c
+    slot = jnp.where(keep, flat_e * c + pos, e * c)         # overflow -> slot E*C
+
+    x_rep = jnp.repeat(xt, k, axis=0)                       # (T*k, D)
+    # Scatter with the operand sharded on D (model axis): each shard scatters
+    # its D-slice locally (indices replicated, no giant replicated buffer).
+    # The reshard to expert-sharded right after IS the EP dispatch
+    # all-to-all of real expert-parallel systems.
+    src = shard(jnp.where(keep[:, None], x_rep, 0), None, "act_mlp")
+    buf = shard(jnp.zeros((e * c + 1, d), dt), None, "act_mlp")
+    buf = buf.at[slot].set(src)
+    buf = shard(buf, None, "act_mlp")
+    h = buf[: e * c].reshape(e, c, d)
+    h = shard(h, "act_experts", None, None)                 # <- EP all-to-all
+
+    g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(dt))
+    act = jax.nn.silu(g) if cfg.mlp_act == "silu" else jax.nn.gelu(g)
+    out = jnp.einsum("ecf,efd->ecd", act * u, p["w_down"].astype(dt))
+    out = shard(out, "act_experts", None, None)
+
+    out_flat = jnp.concatenate(
+        [out.reshape(e * c, d), jnp.zeros((1, d), dt)], axis=0
+    )
+    out_flat = shard(out_flat, None, "act_mlp")             # <- return A2A
+    y_disp = out_flat[slot] * keep[:, None].astype(dt)      # (T*k, D)
+    y = (y_disp.reshape(t, k, d)
+         * top_w.reshape(t, k, 1).astype(dt)).sum(axis=1)
+    return y.reshape(t, 1, d)

@@ -1,0 +1,233 @@
+"""Parameter pytree construction + logical sharding axes.
+
+Every leaf is described once in a *leaf spec* ``(shape, logical_axes, init)``
+so the init pytree and the logical-axis pytree can never drift apart.
+Stacked layer leaves get a leading ``total_occurrences`` dim (logical name
+"layers", always replicated) and are consumed by the super-block scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init
+
+__all__ = ["init_params", "param_logical_axes", "param_count"]
+
+Init = Union[str, Callable]
+
+
+def _leaf(key, shape, init: Init, dtype=jnp.float32):
+    if callable(init):
+        return init(key, shape).astype(dtype)
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init.startswith("dense"):
+        ax = int(init[5:] or 0)
+        return dense_init(key, shape, in_axis=ax, dtype=dtype)
+    raise ValueError(init)
+
+
+# ---------------------------------------------------------------------------
+# leaf specs per layer kind: name -> (shape, logical axes, init)
+# ---------------------------------------------------------------------------
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "norm1": ((d,), (None,), "zeros"),
+        "wq": ((d, h * hd), ("embed", "qkv"), "dense0"),
+        "wk": ((d, kv * hd), ("embed", "qkv"), "dense0"),
+        "wv": ((d, kv * hd), ("embed", "qkv"), "dense0"),
+        "wo": ((h * hd, d), ("qkv", "embed"), "dense0"),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ((hd,), (None,), "zeros")
+        out["k_norm"] = ((hd,), (None,), "zeros")
+    return out
+
+
+def _mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm2": ((d,), (None,), "zeros"),
+        "w_gate": ((d, f), ("embed", "mlp"), "dense0"),
+        "w_up": ((d, f), ("embed", "mlp"), "dense0"),
+        "w_down": ((f, d), ("mlp", "embed"), "dense0"),
+    }
+
+
+def _moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    return {
+        "norm2": ((d,), (None,), "zeros"),
+        "w_router": ((d, e), ("embed", "experts"), "dense0"),
+        "w_gate": ((e, d, f), ("experts", "embed", None), "dense1"),
+        "w_up": ((e, d, f), ("experts", "embed", None), "dense1"),
+        "w_down": ((e, f, d), ("experts", None, "embed"), "dense1"),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig) -> dict:
+    d, di, n, k, r = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv,
+                      cfg.dt_rank)
+
+    def a_log_init(key, shape):
+        a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+        return jnp.log(a)
+
+    def dt_b_init(key, shape):
+        # inverse-softplus of dt ~ U[1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, shape) * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return dt + jnp.log(-jnp.expm1(-dt))
+
+    return {
+        "norm1": ((d,), (None,), "zeros"),
+        "in_proj": ((d, 2 * di), ("embed", "dinner"), "dense0"),
+        "conv_w": ((di, k), ("dinner", None), "dense1"),
+        "conv_b": ((di,), ("dinner",), "zeros"),
+        "x_proj": ((di, r + 2 * n), ("dinner", None), "dense0"),
+        "dt_w": ((r, di), (None, "dinner"), "dense0"),
+        "dt_b": ((di,), ("dinner",), dt_b_init),
+        "A_log": ((di, n), ("dinner", None), a_log_init),
+        "Dskip": ((di,), ("dinner",), "ones"),
+        "out_proj": ((di, d), ("dinner", "embed"), "dense0"),
+    }
+
+
+def _rwkv_specs(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    lora = 64
+
+    def w_base_init(key, shape):
+        # per-channel decay spread: exp(-exp(w)) from ~0.37 to ~0.999
+        lin = jnp.linspace(-6.0, 1.0, d)
+        return lin
+
+    def u_init(key, shape):
+        return 0.5 * jax.random.normal(key, shape)
+
+    return {
+        "norm1": ((d,), (None,), "zeros"),
+        "mu": ((5, d), (None, None), lambda k_, s_: 0.5 * jnp.ones(s_)),
+        "w_base": ((d,), (None,), w_base_init),
+        "w_lora_a": ((d, lora), ("embed", None), "dense0"),
+        "w_lora_b": ((lora, d), (None, "embed"), "zeros"),
+        "wr": ((d, d), ("embed", "qkv"), "dense0"),
+        "wk": ((d, d), ("embed", "qkv"), "dense0"),
+        "wv": ((d, d), ("embed", "qkv"), "dense0"),
+        "wg": ((d, d), ("embed", "qkv"), "dense0"),
+        "u": ((h, hd), (None, None), u_init),
+        "ln_x": ((d,), (None,), "zeros"),
+        "wo": ((d, d), ("qkv", "embed"), "dense0"),
+    }
+
+
+def _cmix_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm2": ((d,), (None,), "zeros"),
+        "cm_mu": ((2, d), (None, None), lambda k_, s_: 0.5 * jnp.ones(s_)),
+        "cm_k": ((d, f), ("embed", "mlp"), "dense0"),
+        "cm_v": ((f, d), ("mlp", "embed"), "dense0"),
+        "cm_r": ((d, d), ("embed", "qkv"), "dense0"),
+    }
+
+
+def _cross_specs(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "norm_x": ((d,), (None,), "zeros"),
+        "xwq": ((d, h * hd), ("embed", "qkv"), "dense0"),
+        "xwk": ((d, h * hd), ("embed", "qkv"), "dense0"),
+        "xwv": ((d, h * hd), ("embed", "qkv"), "dense0"),
+        "xwo": ((h * hd, d), ("qkv", "embed"), "dense0"),
+    }
+
+
+_MIXERS = {"attn": _attn_specs, "swa": _attn_specs, "mamba": _mamba_specs,
+           "rwkv": _rwkv_specs}
+_FFNS = {"mlp": _mlp_specs, "moe": _moe_specs, "cmix": _cmix_specs}
+
+
+def kind_specs(cfg: ModelConfig, kind: str, with_cross: bool = False) -> dict:
+    mixer, ffn = kind.split("+")
+    specs = {}
+    specs.update(_MIXERS[mixer](cfg))
+    if with_cross:
+        specs.update(_cross_specs(cfg))
+    specs.update(_FFNS[ffn](cfg))
+    return specs
+
+
+def _build(cfg: ModelConfig, key, *, axes_only: bool) -> dict:
+    counter = [0]
+
+    def nxt():
+        counter[0] += 1
+        return jax.random.fold_in(key, counter[0]) if key is not None else None
+
+    def leaf(shape, axes, init, stack: int = 0):
+        full_axes = (("layers",) + tuple(axes)) if stack else tuple(axes)
+        if axes_only:
+            return full_axes
+        if stack:
+            ks = [nxt() for _ in range(stack)]
+            return jnp.stack([_leaf(k_, shape, init) for k_ in ks])
+        return _leaf(nxt(), shape, init)
+
+    d, v = cfg.d_model, cfg.vocab_size
+    out: dict = {
+        "embed": leaf((v, d), ("vocab", "embed"),
+                      lambda k_, s_: 0.02 * jax.random.normal(k_, s_)),
+        "final_norm": leaf((d,), (None,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = leaf((d, v), ("embed", "vocab"), "dense0")
+
+    blocks = {}
+    for kind in cfg.kinds:
+        occ = len(cfg.kind_positions(kind)) * cfg.n_repeat
+        specs = kind_specs(cfg, kind, with_cross=cfg.is_encdec)
+        blocks[kind] = {
+            name: leaf(shape, axes, init, stack=occ)
+            for name, (shape, axes, init) in specs.items()
+        }
+    out["blocks"] = blocks
+
+    if cfg.is_encdec:
+        enc_blocks = {
+            name: leaf(shape, axes, init, stack=cfg.encoder_layers)
+            for name, (shape, axes, init) in kind_specs(cfg, "attn+mlp").items()
+        }
+        out["encoder"] = {
+            "blocks": {"attn+mlp": enc_blocks},
+            "final_norm": leaf((d,), (None,), "zeros"),
+            "pos_emb": leaf((cfg.encoder_seq, d), (None, None),
+                            lambda k_, s_: 0.02 * jax.random.normal(k_, s_)),
+        }
+        out["dec_pos_emb"] = leaf(
+            (32768, d), (None, None),
+            lambda k_, s_: 0.02 * jax.random.normal(k_, s_))
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    return _build(cfg, key, axes_only=False)
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    return _build(cfg, None, axes_only=True)
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))

@@ -1,0 +1,168 @@
+"""RWKV6 ("Finch") mixer: linear attention with data-dependent diagonal
+decay, plus RWKV channel-mix.
+
+Training/prefill uses the *chunked* WKV formulation (matmul-rich, TPU
+friendly): within a chunk of C tokens, with per-step decay vectors
+``w_t ∈ (0,1)^hd`` and cumulative log-decay ``L_t = Σ_{τ<=t} log w_τ``,
+
+  y_t = (r_t ⊙ e^{L_{t-1}}) · S_in                       (inter-chunk)
+      + Σ_{j<t} [(r_t ⊙ e^{L_{t-1}}) · (k_j ⊙ e^{-L_j})] v_j   (intra)
+      + (r_t ⊙ u ⊙ k_t) · v_t                            (bonus diagonal)
+  S_out = diag(e^{L_C}) S_in + Σ_j (k_j ⊙ e^{L_C - L_j}) v_jᵀ
+
+The e^{-L_j} factor is clipped at e^{30} — pairs that would overflow have
+decayed below f32 noise anyway (contribution ~e^{-30}).
+
+Decode is the exact recurrence S_t = diag(w_t) S_{t-1} + k_t v_tᵀ.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import rms_norm
+
+__all__ = ["rwkv_mixer", "rwkv_decode", "rwkv_channel_mix",
+           "init_rwkv_state", "CHUNK"]
+
+# CHUNK x max|log w| must stay inside f32 exponent range: with the decay
+# exponent clamped at 1.0 (per-step log-decay >= -e = -2.72), |L| <= 43.5
+# over a 16-token chunk — e^{±L} is exactly representable, so the chunked
+# factorization r·e^{L_{t-1}} @ (k·e^{-L_j})ᵀ is exact to fp rounding
+# (validated against the token recurrence in tests/test_models.py).
+CHUNK = 16
+CLIP = 44.0
+
+
+def _proj(x, w, dt):
+    return jnp.einsum("bsd,de->bse", x, w.astype(dt))
+
+
+def _mix_heads(x: jax.Array, x_prev: jax.Array, p: dict, cfg: ModelConfig):
+    """Token-shift mixing + projections -> per-head r, k, v, g, log-decay."""
+    dt = x.dtype
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(dt)                                  # (5, D)
+    xs = [x + mu[i] * (shifted - x) for i in range(5)]       # r k v w g
+    hs = lambda t: shard(t.reshape(b, s, h, hd),
+                         "act_batch", "act_seq", "act_heads", None)
+    r = hs(_proj(xs[0], p["wr"], dt))
+    k = hs(_proj(xs[1], p["wk"], dt))
+    v = hs(_proj(xs[2], p["wv"], dt))
+    # data-dependent decay (low-rank): w = exp(-exp(base + tanh(x A) B))
+    wl = jnp.einsum(
+        "bsd,dr->bsr", xs[3].astype(jnp.float32),
+        p["w_lora_a"].astype(jnp.float32),
+    )
+    wl = jnp.einsum("bsr,rd->bsd", jnp.tanh(wl), p["w_lora_b"].astype(jnp.float32))
+    logw = -jnp.exp(
+        jnp.clip(p["w_base"].astype(jnp.float32) + wl, -8.0, 1.0)
+    ).reshape(b, s, h, hd)                                   # log w_t < 0
+    g = jax.nn.silu(_proj(xs[4], p["wg"], dt))               # (B,S,D)
+    return r, k, v, logw, g
+
+
+def _wkv_chunk(s_in, r, k, v, logw, u):
+    """One chunk; r/k/v (B,H,C,hd) f32, logw (B,H,C,hd), u (H,hd),
+    s_in (B,H,hd,hd).  Returns (s_out, y (B,H,C,hd))."""
+    c = r.shape[2]
+    lcum = jnp.cumsum(logw, axis=2)                          # L_t (incl. t)
+    lprev = lcum - logw                                      # L_{t-1}
+    r_t = r * jnp.exp(lprev)
+    k_t = k * jnp.exp(jnp.minimum(-lcum, CLIP))
+    a = jnp.einsum("bhtd,bhjd->bhtj", r_t, k_t)              # (B,H,C,C)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    a = jnp.where(mask[None, None], a, 0.0)
+    # bonus diagonal: (r_t ⊙ u ⊙ k_t)·v_t
+    diag = jnp.einsum("bhtd,bhtd->bht", r * u[None, :, None, :], k)
+    y = (
+        jnp.einsum("bhtd,bhde->bhte", r_t, s_in)
+        + jnp.einsum("bhtj,bhje->bhte", a, v)
+        + diag[..., None] * v
+    )
+    ltot = lcum[:, :, -1:, :]                                # L_C
+    k_s = k * jnp.exp(ltot - lcum)
+    s_out = jnp.exp(ltot.squeeze(2))[..., None] * s_in + jnp.einsum(
+        "bhjd,bhje->bhde", k_s, v
+    )
+    return s_out, y
+
+
+def rwkv_mixer(
+    x: jax.Array,              # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    state: tuple | None = None,   # (x_prev (B,D), S (B,H,hd,hd))
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    x_prev = state[0] if state is not None else jnp.zeros((b, d), x.dtype)
+    s_in = (state[1] if state is not None
+            else jnp.zeros((b, h, hd, hd), jnp.float32))
+    r, k, v, logw, g = _mix_heads(x, x_prev, p, cfg)
+
+    chunk = min(CHUNK, s)
+    while s % chunk:            # largest divisor of s that is <= CHUNK
+        chunk -= 1
+    nc = s // chunk
+    u = p["u"].astype(jnp.float32)
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(0, 2, 1, 3)
+                      for t in (r, k, v, logw))              # (B,H,S,hd)
+
+    @jax.checkpoint  # recompute per chunk in backward
+    def step(s_st, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 2)
+        s_st, y = _wkv_chunk(s_st, sl(rf), sl(kf), sl(vf), sl(wf), u)
+        return s_st, y
+
+    s_out, ys = jax.lax.scan(step, s_in, jnp.arange(nc))     # ys (nc,B,H,C,hd)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)     # (B,S,H,hd)
+    # per-head group norm, then gate and output projection
+    y = rms_norm(y, p["ln_x"].reshape(h, hd), cfg.norm_eps).reshape(b, s, d)
+    y = (y * g).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    out = shard(out, "act_batch", "act_seq", "act_embed")
+    if return_state:
+        return out, (x[:, -1, :], s_out)
+    return out
+
+
+def rwkv_decode(x, p, cfg, state):
+    return rwkv_mixer(x, p, cfg, state=state, return_state=True)
+
+
+def rwkv_channel_mix(
+    x: jax.Array, p: dict, cfg: ModelConfig,
+    state: jax.Array | None = None,    # x_prev (B, D)
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    dt = x.dtype
+    x_prev = state if state is not None else jnp.zeros((b, d), dt)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["cm_mu"].astype(dt)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(dt))
+    kk = shard(kk, "act_batch", "act_seq", "act_mlp")
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_v"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(dt)))
+    out = shard(rr * vv, "act_batch", "act_seq", "act_embed")
+    if return_state:
+        return out, x[:, -1, :]
+    return out
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    h, hd, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return (
+        jnp.zeros((batch, d), dtype),                        # attn x_prev
+        jnp.zeros((batch, h, hd, hd), jnp.float32),          # wkv state
+        jnp.zeros((batch, d), dtype),                        # cmix x_prev
+    )

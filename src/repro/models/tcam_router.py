@@ -1,0 +1,75 @@
+"""Beyond-paper integration: a decision-tree MoE router compiled to a TCAM
+LUT with the paper's DT-HW compiler and evaluated in-graph with the bitplane
+match (DESIGN.md §4).
+
+Pipeline:
+  1. Train a CART tree mapping (a projection of) hidden states -> expert id
+     (e.g. distilling a trained softmax router, or from k-means clusters).
+  2. ``compile_router`` runs the paper's parse/reduce/encode pipeline and
+     lowers the LUT to flat JAX arrays:
+       bit_feat / bit_thr / bit_const — input encoding is pure comparisons
+         (bit i of feature f's code = x[f] > th_{T-1-i}; trailing bit = 1),
+       is0 / is1 — bitplanes of the encoded LUT rows,
+       classes — expert id per row.
+  3. ``route_tcam`` evaluates the match in-graph: one (T, W) x (W, R) matmul
+     pair — exactly the paper's massively-parallel search, as the MoE router.
+
+The TCAM router is top-1 (a DT predicts one class).  It is a selectable
+``router="tcam_dt"`` config option; the dry-run cells use the standard
+softmax router.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cart import DecisionTree
+from ..core.encode import encode_table, feature_thresholds
+from ..core.lut import bitplanes
+from ..core.reduce import reduce_tree
+
+__all__ = ["compile_router", "route_tcam"]
+
+
+def compile_router(tree: DecisionTree) -> dict:
+    """Compile a CART tree into flat arrays for in-graph TCAM routing."""
+    table = reduce_tree(tree)
+    lut = encode_table(table)
+    ths = feature_thresholds(table)
+
+    bit_feat, bit_thr, bit_const = [], [], []
+    for f_idx, th in enumerate(ths):
+        t_i = th.size
+        # feature code has t_i + 1 bits; bit i (left->right) compares against
+        # th[t_i - 1 - i]; the last bit is constant 1.
+        for i in range(t_i):
+            bit_feat.append(f_idx)
+            bit_thr.append(float(th[t_i - 1 - i]))
+            bit_const.append(False)
+        bit_feat.append(0)
+        bit_thr.append(0.0)
+        bit_const.append(True)
+    is0, is1 = bitplanes(lut.cells)
+    return {
+        "bit_feat": jnp.asarray(np.array(bit_feat, np.int32)),
+        "bit_thr": jnp.asarray(np.array(bit_thr, np.float32)),
+        "bit_const": jnp.asarray(np.array(bit_const)),
+        "is0": jnp.asarray(is0.astype(np.float32)),
+        "is1": jnp.asarray(is1.astype(np.float32)),
+        "classes": jnp.asarray(lut.classes.astype(np.int32)),
+    }
+
+
+def route_tcam(x: jax.Array, bits: dict) -> jax.Array:
+    """(T, D) hidden states -> (T,) expert ids via TCAM match.
+
+    Encoding + match are exactly the paper's semantics; by DT construction
+    every input matches exactly one row."""
+    vals = x.astype(jnp.float32)[:, bits["bit_feat"]]        # (T, W)
+    xbits = jnp.where(bits["bit_const"][None, :], 1.0,
+                      (vals > bits["bit_thr"][None, :]).astype(jnp.float32))
+    mism = xbits @ bits["is0"].T + (1.0 - xbits) @ bits["is1"].T
+    row = jnp.argmin(mism, axis=-1)                          # zero-mismatch row
+    return bits["classes"][row]

@@ -1,0 +1,53 @@
+"""Gradient compression: per-tensor symmetric int8 quantization with error
+feedback (EF / memory-compensated SGD).
+
+On real multi-pod meshes the quantize/dequantize pair wraps the gradient
+reduce-scatter at the pod boundary (8x fewer DCN bytes); the EF residual
+carries the quantization error into the next step so convergence is
+preserved (Stich et al., Karimireddy et al.).
+
+This module is the algorithmic layer: ``ef_compress`` runs in-graph and is
+exercised by the train-step flag ``compress="int8_ef"`` plus unit/property
+tests; wire-level integration is the documented extension point
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress", "ef_init"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params) -> dict:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def ef_compress(grads, residual):
+    """Error-feedback compression: g' = Q(g + r); r' = (g + r) - g'.
+    Returns (compressed grads, new residual)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        d = dequantize_int8(q, s)
+        return d, x - d
+
+    pairs = jax.tree.map(one, grads, residual)
+    g_out = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    r_out = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return g_out, r_out

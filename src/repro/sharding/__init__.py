@@ -1,0 +1,12 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM substrate."""
+from .rules import (
+    Rules,
+    current_rules,
+    make_rules,
+    mesh_spec,
+    shard,
+    use_rules,
+)
+
+__all__ = ["Rules", "current_rules", "make_rules", "mesh_spec", "shard",
+           "use_rules"]

@@ -1,0 +1,184 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Every tensor dimension in the model substrate carries a *logical* name; a
+``Rules`` object maps logical names to mesh axes and materializes
+``PartitionSpec``s.  A logical dim whose size does not divide the mesh-axis
+size is *replicated* (the axis is dropped) — this is what lets e.g.
+phi3-medium (40 heads) compile on a 16-way tensor axis; re-enabling padded
+sharding there is a recorded hillclimb (EXPERIMENTS.md §Perf).
+
+Default mapping (1000+ node posture, see DESIGN.md §5):
+
+  params:      vocab/heads/kv_heads/mlp/experts -> "model" (TP/EP)
+               embed/ffn-in (the non-TP big dim) -> "data"  (FSDP / ZeRO-3)
+  activations: batch -> ("pod", "data") (DP; pod composes as extra DP)
+               heads/mlp/experts/vocab -> "model" (TP)
+  decode:      cache_seq -> "model" (KV-parallel decode); for batch=1
+               long-context it becomes ("data", "model") so 500k caches
+               spread over all chips.
+
+Rules are *installed* with ``use_rules`` (a context manager); model code
+calls ``shard(x, *logical_dims)`` which is a no-op outside a rules context —
+smoke tests on one device run the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "make_rules", "mesh_spec", "shard", "use_rules",
+           "current_rules"]
+
+AxisName = Union[str, tuple, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    table: dict  # logical name -> mesh axis (str | tuple | None)
+
+    def axis_size(self, axis: AxisName) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[axis]
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical dims; drops axes that don't divide the
+        dim size (when ``shape`` is given) or that repeat in the spec."""
+        used: set = set()
+        out = []
+        for i, name in enumerate(logical):
+            axis = self.table.get(name) if name else None
+            if axis is not None and shape is not None:
+                if shape[i] % self.axis_size(axis) != 0:
+                    axis = None
+            # one mesh axis may appear only once in a spec
+            flat = axis if isinstance(axis, tuple) else (axis,)
+            if axis is not None and any(a in used for a in flat):
+                axis = None
+            if axis is not None:
+                used.update(flat)
+            out.append(axis)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    batch_divisible: bool = True,
+    seq_sharded_decode: bool = False,
+    seq_parallel: bool = False,
+    dp_only: bool = False,
+) -> Rules:
+    """Build the rule table for a mesh.
+
+    batch_divisible=False (e.g. long_500k, global batch 1): the batch axis is
+    replicated and the decode cache_seq dim spreads over (data, model).
+    seq_parallel=True (Megatron-SP style): activations shard their sequence
+    dim over "model"; because one mesh axis appears at most once per spec,
+    downstream head/mlp TP annotations dedup away automatically and weights
+    are all-gathered per layer (ZeRO-3 comm pattern).
+    dp_only=True (pure ZeRO-DP, the <2B-model mapping — EXPERIMENTS.md
+    §Perf): the batch shards over EVERY mesh axis, activations are never
+    tensor-sharded, and weights (2D-sharded at rest) are fully all-gathered
+    at use.  Replaces per-layer activation-sized TP all-reduces with
+    weight-sized all-gathers — a ~5x collective-bytes cut for models whose
+    layers are small relative to the activation volume.
+    """
+    has_pod = "pod" in mesh.shape
+    dp = ("pod", "data") if has_pod else ("data",)
+    # dp_only batch spans (data, model) — NOT pod: the global batch (256)
+    # must divide the DP degree, and pod still carries FSDP of the params
+    full = ("data", "model")
+    table = {
+        # --- parameter dims ---
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "embed": dp,          # FSDP shard of the non-TP dim; multi-pod
+                              # composes (pod, data) = 32-way ZeRO-3
+        "embed2": None,       # second embed dim (e.g. attn out proj input)
+        "head_dim": None,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        # --- activation dims ---
+        "act_batch": (full if dp_only else dp) if batch_divisible else None,
+        "act_flat": (full if dp_only else dp) if batch_divisible else None,
+        "act_seq": "model" if seq_parallel else None,
+        "act_embed": None,
+        "act_heads": None if dp_only else "model",
+        "act_kv_heads": None if dp_only else "model",
+        "act_mlp": None if dp_only else "model",
+        "act_experts": None if dp_only else "model",
+        "act_vocab": None if dp_only else "model",
+        "act_dinner": None if dp_only else "model",
+        "act_hd": None if dp_only else "model",  # decode-cache head_dim
+        # --- decode cache dims ---
+        # batch-divisible decode shards caches on kv_heads/head_dim (keeps
+        # the per-token dynamic-update-slice shard-local); long-context
+        # batch-1 decode spreads cache_seq over every axis instead.
+        "cache_seq": (
+            (("data", "model") if has_pod is False else ("pod", "data", "model"))
+            if (seq_sharded_decode and not batch_divisible)
+            else None
+        ),
+        # weight gather-at-use policy (see models/lm.py _gather_fsdp)
+        "_gather_tp": dp_only,
+    }
+    # normalize tuple-of-one
+    for k, v in table.items():
+        if isinstance(v, tuple) and len(v) == 1:
+            table[k] = v[0]
+    return Rules(mesh=mesh, table=table)
+
+
+def mesh_spec(rules: Rules, logical: Sequence[Optional[str]],
+              shape: Optional[Sequence[int]] = None) -> P:
+    return rules.spec(logical, shape)
+
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_rules", default=None)
+
+
+def current_rules() -> Optional[Rules]:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _CTX.set(rules)
+    try:
+        yield rules
+    finally:
+        _CTX.reset(tok)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with its logical dims; no-op without rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )

@@ -1,0 +1,15 @@
+"""Train/serve step builders with full sharding specs."""
+from .step import (
+    TrainState,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    init_train_state,
+    input_specs,
+    state_shardings,
+)
+
+__all__ = [
+    "TrainState", "build_decode_step", "build_prefill_step",
+    "build_train_step", "init_train_state", "input_specs", "state_shardings",
+]

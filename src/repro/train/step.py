@@ -1,0 +1,265 @@
+"""Step builders: jit-compiled train / prefill / decode steps with full
+sharding specifications, microbatch gradient accumulation, remat policies and
+optional int8+EF gradient compression.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins (sharding attached) for
+every model input of every (arch × shape) cell — the multi-pod dry-run
+lowers/compiles against these without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import (
+    ModelConfig, decode_step, init_cache, init_params, loss_fn,
+    param_logical_axes, prefill,
+)
+from ..models.layers import COMPUTE_DTYPE
+from ..optim import (
+    AdamWConfig, OptState, adamw_init, adamw_update, ef_compress,
+)
+from ..optim.compress import ef_init
+from ..sharding import Rules, make_rules, use_rules
+
+__all__ = [
+    "TrainState", "init_train_state", "state_shardings", "input_specs",
+    "build_train_step", "build_prefill_step", "build_decode_step",
+    "cache_logical_axes",
+]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    ef: Optional[dict]      # error-feedback residual (compression) or None
+
+
+def init_train_state(cfg: ModelConfig, key, *, compress: bool = False,
+                     opt_cfg: AdamWConfig = AdamWConfig()) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg),
+                      ef=ef_init(params) if compress else None)
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+def _param_shardings(cfg: ModelConfig, rules: Rules, shapes) -> Any:
+    axes = param_logical_axes(cfg)
+    return jax.tree.map(
+        lambda ax, s: rules.sharding(ax, s.shape), axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def state_shardings(cfg: ModelConfig, rules: Rules, *,
+                    compress: bool = False, dtype=jnp.float32,
+                    mu_dtype=jnp.float32, nu_dtype=jnp.float32):
+    """ShapeDtypeStructs (shardings attached) for the full TrainState."""
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: init_params(cfg, key))
+    p_shard = _param_shardings(cfg, rules, p_shapes)
+
+    def sds(shape_tree, shard_tree, dt=None):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, dt or s.dtype, sharding=sh),
+            shape_tree, shard_tree)
+
+    params_sds = sds(p_shapes, p_shard, dtype)
+    cast = lambda tree, dt: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt, sharding=s.sharding),
+        tree)
+    opt_sds = OptState(mu=cast(params_sds, mu_dtype),
+                       nu=cast(params_sds, nu_dtype),
+                       step=jax.ShapeDtypeStruct((), jnp.int32))
+    ef_sds = cast(params_sds, jnp.float32) if compress else None
+    return TrainState(params=params_sds, opt=opt_sds, ef=ef_sds)
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    """Logical axes mirroring ``init_cache``'s structure."""
+    table = {
+        "k": ("layers", "act_batch", "cache_seq", "act_kv_heads", "act_hd"),
+        "v": ("layers", "act_batch", "cache_seq", "act_kv_heads", "act_hd"),
+        "slot_pos": ("layers", None),
+        "conv": ("layers", "act_batch", None, "act_dinner"),
+        "h": ("layers", "act_batch", "act_dinner", None),
+        "xa": ("layers", "act_batch", None),
+        "S": ("layers", "act_batch", None, None, None),
+        "xc": ("layers", "act_batch", None),
+        "xk": ("layers", "act_batch", None, "act_heads", None),
+        "xv": ("layers", "act_batch", None, "act_heads", None),
+    }
+    out = {}
+    for kind in cfg.kinds:
+        mixer, ffn = kind.split("+")
+        names = []
+        if mixer in ("attn", "swa"):
+            names += ["k", "v", "slot_pos"]
+        elif mixer == "mamba":
+            names += ["conv", "h"]
+        elif mixer == "rwkv":
+            names += ["xa", "S", "xc"]
+        if ffn == "cmix" and "xc" not in names:
+            names.append("xc")
+        if cfg.is_encdec:
+            names += ["xk", "xv"]
+        out[kind] = {n: table[n] for n in names}
+    return out
+
+
+def _batch_struct(cfg: ModelConfig, seq: int, batch: int, rules: Rules,
+                  *, with_labels: bool):
+    bsp = rules.sharding(("act_batch", None), (batch, seq))
+    text = seq - cfg.frontend_tokens
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, text), jnp.int32, sharding=bsp),
+    }
+    if with_labels:
+        # labels align with text positions; loss_fn pads frontend positions
+        out["labels"] = jax.ShapeDtypeStruct((batch, text), jnp.int32,
+                                             sharding=bsp)
+    if cfg.frontend_tokens:
+        shp = (batch, cfg.frontend_tokens, cfg.d_model)
+        out["patches"] = jax.ShapeDtypeStruct(
+            shp, COMPUTE_DTYPE,
+            sharding=rules.sharding(("act_batch", None, None), shp))
+    if cfg.is_encdec:
+        shp = (batch, cfg.encoder_seq, cfg.d_model)
+        out["frames"] = jax.ShapeDtypeStruct(
+            shp, COMPUTE_DTYPE,
+            sharding=rules.sharding(("act_batch", None, None), shp))
+    return out
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_seq: int, rules: Rules):
+    shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq))
+    axes = cache_logical_axes(cfg)
+    return jax.tree.map(
+        lambda s, ax: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=rules.sharding(ax, s.shape)),
+        shapes, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def input_specs(cfg: ModelConfig, shape, rules: Rules,
+                settings: Optional[dict] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    shape.step selects the lowered computation:
+      train   -> {"state": TrainState, "batch": {...}}
+      prefill -> {"params", "batch", "caches"}
+      decode  -> {"params", "token", "caches", "pos"}
+    """
+    settings = settings or {}
+    b, s = shape.global_batch, shape.seq_len
+    if shape.step == "train":
+        state = state_shardings(
+            cfg, rules,
+            dtype=jnp.dtype(settings.get("param_dtype", "float32")),
+            mu_dtype=jnp.dtype(settings.get("mu_dtype", "float32")),
+            nu_dtype=jnp.dtype(settings.get("nu_dtype", "float32")))
+        batch = _batch_struct(cfg, s, b, rules, with_labels=True)
+        return {"state": state, "batch": batch}
+    if shape.step == "prefill":
+        state = state_shardings(cfg, rules, dtype=COMPUTE_DTYPE)
+        batch = _batch_struct(cfg, s, b, rules, with_labels=False)
+        caches = _cache_struct(cfg, b, s, rules)
+        return {"params": state.params, "batch": batch, "caches": caches}
+    if shape.step == "decode":
+        state = state_shardings(cfg, rules, dtype=COMPUTE_DTYPE)
+        token = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32, sharding=rules.sharding(("act_batch", None)))
+        caches = _cache_struct(cfg, b, s, rules)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return {"params": state.params, "token": token, "caches": caches,
+                "pos": pos}
+    raise ValueError(shape.step)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def build_train_step(
+    cfg: ModelConfig,
+    rules: Rules,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    accum: int = 1,
+    compress: bool = False,
+    remat: str = "full",
+    accum_dtype=jnp.float32,
+):
+    """Returns train_step(state, batch) -> (state, metrics), jit-ready.
+
+    accum > 1 splits the per-step batch into microbatches scanned
+    sequentially; XLA's latency-hiding scheduler overlaps microbatch i+1's
+    compute with microbatch i's gradient reduce-scatter on real meshes.
+    ``accum_dtype`` controls the accumulation buffer (bf16 halves the
+    gradient HBM for 100B+ models; see configs.TRAIN_SETTINGS).
+    """
+
+    def loss_of(params, mb):
+        return loss_fn(params, cfg, mb, remat=remat)
+
+    def train_step(state: TrainState, batch):
+        with use_rules(rules):
+            if accum == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(state.params, batch)
+            else:
+                def split(x):
+                    return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+                mbs = jax.tree.map(split, batch)
+
+                def micro(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(state.params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+                (grads, loss), _ = jax.lax.scan(
+                    micro, (zeros, jnp.float32(0)), mbs)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+                metrics = {"loss": loss}
+
+            ef = state.ef
+            if compress:
+                grads, ef = ef_compress(grads, ef)
+            params, opt, m2 = adamw_update(grads, state.opt, state.params,
+                                           opt_cfg)
+            metrics = dict(metrics, **m2)
+            return TrainState(params=params, opt=opt, ef=ef), metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, rules: Rules):
+    def prefill_step(params, batch, caches):
+        with use_rules(rules):
+            return prefill(params, cfg, batch["tokens"], caches,
+                           frontend=batch.get("patches"),
+                           frames=batch.get("frames"))
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, rules: Rules):
+    def serve_step(params, token, caches, pos):
+        with use_rules(rules):
+            return decode_step(params, cfg, token, caches, pos)
+    return serve_step

@@ -1,0 +1,9 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single-device) CPU; only launch/dryrun.py forces 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

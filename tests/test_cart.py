@@ -1,0 +1,57 @@
+"""CART decision-tree training (from scratch)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predict, train_tree, tree_paths
+
+
+def test_pure_data_perfect_fit():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(200, 3))
+    y = ((X[:, 0] > 0.5).astype(int) + (X[:, 1] > 0.3)).astype(np.int64)
+    tree = train_tree(X, y, max_depth=8)
+    assert (predict(tree, X) == y).mean() == 1.0
+
+
+def test_depth_and_leaf_budget():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(size=(500, 4))
+    y = rng.integers(0, 2, 500)
+    t1 = train_tree(X, y, max_depth=3)
+    assert t1.depth() <= 3
+    t2 = train_tree(X, y, max_depth=20, max_leaves=10)
+    assert t2.n_leaves <= 10
+
+
+def test_paths_partition_input_space():
+    """Every input follows exactly one root->leaf path."""
+    rng = np.random.default_rng(2)
+    X = rng.uniform(size=(300, 3))
+    y = (X[:, 0] + X[:, 1] > 1).astype(np.int64)
+    tree = train_tree(X, y, max_depth=6)
+    paths = tree_paths(tree)
+    Xt = rng.uniform(size=(100, 3))
+    hits = np.zeros(100, dtype=int)
+    preds = np.zeros(100, dtype=int)
+    for conds, cls in paths:
+        ok = np.ones(100, bool)
+        for f, op, th in conds:
+            ok &= (Xt[:, f] <= th) if op == "<=" else (Xt[:, f] > th)
+        hits += ok
+        preds[ok] = cls
+    assert (hits == 1).all()
+    np.testing.assert_array_equal(preds, predict(tree, Xt))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 9999), n=st.integers(30, 120))
+def test_train_accuracy_beats_majority(seed, n):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(size=(n, 2))
+    y = (X[:, 0] > 0.5).astype(np.int64)
+    if len(np.unique(y)) < 2:
+        return
+    tree = train_tree(X, y, max_depth=4)
+    acc = (predict(tree, X) == y).mean()
+    maj = max(np.mean(y == 0), np.mean(y == 1))
+    assert acc >= maj

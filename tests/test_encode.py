@@ -1,0 +1,100 @@
+"""Ternary adaptive encoding (paper §II.A.4, Fig 1) + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CELL_0, CELL_1, CELL_X, span_code, unary_code,
+                        encode_table, encode_inputs)
+from repro.core.encode import feature_thresholds, _range_index
+from repro.core.reduce import (CMP_BETWEEN, CMP_GT, CMP_LE, CMP_NONE,
+                               RuleTable)
+from repro.core.lut import bitplanes
+
+
+def _code_str(c):
+    return "".join({CELL_0: "0", CELL_1: "1", CELL_X: "x"}[int(v)] for v in c)
+
+
+class TestFig1:
+    """The paper's worked example: thresholds {0.8, 1.5, 1.65, 1.75}."""
+
+    def test_exclusive_range_codes(self):
+        assert _code_str(unary_code(1, 5)) == "00001"   # (-inf, 0.8]
+        assert _code_str(unary_code(2, 5)) == "00011"   # (0.8, 1.5]
+        assert _code_str(unary_code(3, 5)) == "00111"   # (1.5, 1.65]
+        assert _code_str(unary_code(4, 5)) == "01111"   # (1.65, 1.75]
+        assert _code_str(unary_code(5, 5)) == "11111"   # (1.75, inf)
+
+    def test_union_range_08_165(self):
+        # (0.8, 1.65] spans ranges 2..3 -> 00x11 (XOR(00011,00111)=00100)
+        assert _code_str(span_code(2, 3, 5)) == "00x11"
+
+    def test_union_range_15_inf(self):
+        # (1.5, +inf) spans ranges 3..5 -> xx111
+        assert _code_str(span_code(3, 5, 5)) == "xx111"
+
+    def test_le_08(self):
+        assert _code_str(span_code(1, 1, 5)) == "00001"
+
+    def test_between_165_175(self):
+        assert _code_str(span_code(4, 4, 5)) == "01111"
+
+
+def _random_rule_table(rng, rows=8, feats=3, n_th=4):
+    """Random reduced table with thresholds drawn from a shared grid (as a
+    real tree produces)."""
+    grid = np.sort(rng.choice(np.linspace(0.05, 0.95, 19), n_th,
+                              replace=False))
+    comp = rng.integers(0, 4, size=(rows, feats)).astype(np.int8)
+    th1 = np.full((rows, feats), np.nan)
+    th2 = np.full((rows, feats), np.nan)
+    for r in range(rows):
+        for f in range(feats):
+            c = comp[r, f]
+            if c == CMP_LE or c == CMP_GT:
+                th1[r, f] = rng.choice(grid)
+            elif c == CMP_BETWEEN:
+                lo, hi = np.sort(rng.choice(len(grid), 2, replace=False))
+                th1[r, f], th2[r, f] = grid[lo], grid[hi]
+    classes = rng.integers(0, 3, size=rows).astype(np.int32)
+    return RuleTable(comp, th1, th2, classes, 3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_encoding_preserves_match_semantics(seed):
+    """PROPERTY (the paper's bijectivity claim): for any reduced rule table
+    and any input, the encoded-LUT ternary match equals direct rule
+    evaluation."""
+    rng = np.random.default_rng(seed)
+    table = _random_rule_table(rng)
+    lut = encode_table(table)
+    X = rng.uniform(-0.2, 1.2, size=(32, table.n_features))
+    want = table.row_matches(X)                      # (B, rows) direct
+    xbits = encode_inputs(lut, X)
+    is0, is1 = bitplanes(lut.cells)
+    mism = xbits @ is0.T + (1 - xbits) @ is1.T
+    got = mism == 0
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_adaptive_precision_width(seed):
+    """Eqn 1: n_i = T_i + 1 bits per feature."""
+    rng = np.random.default_rng(seed)
+    table = _random_rule_table(rng)
+    lut = encode_table(table)
+    ths = feature_thresholds(table)
+    widths = np.diff(lut.feat_offsets)
+    for i, th in enumerate(ths):
+        assert widths[i] == th.size + 1
+
+
+def test_input_encoding_is_exact_range_code():
+    th = np.array([0.8, 1.5, 1.65, 1.75])
+    # value == threshold lands in the range it closes (inclusive ']')
+    assert _range_index(np.array([0.8]), th)[0] == 1
+    assert _range_index(np.array([0.81]), th)[0] == 2
+    assert _range_index(np.array([1.75]), th)[0] == 4
+    assert _range_index(np.array([1.76]), th)[0] == 5

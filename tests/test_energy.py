@@ -1,0 +1,49 @@
+"""Analog hardware model anchors (paper Tables III/IV, Eqns 5-10)."""
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_HW, choose_tile_size, dynamic_range, f_max,
+                        max_cells_per_row, t_cwd, t_opt)
+
+
+TABLE_IV = [  # (D_cap limit, max cells/row, chosen S) — the paper's table
+    (0.2, 154, 128),
+    (0.3, 86, 64),
+    (0.4, 53, 32),
+    (0.5, 33, 32),
+    (0.6, 21, 16),
+]
+
+
+@pytest.mark.parametrize("d_limit,max_cells,s", TABLE_IV)
+def test_table_iv(d_limit, max_cells, s):
+    assert max_cells_per_row(d_limit) == max_cells
+    assert choose_tile_size(d_limit) == s
+
+
+def test_f_max_1ghz_at_s128():
+    """Paper: 'operating frequency for an array width of 128 is 1 GHz'."""
+    assert f_max(128) == pytest.approx(1e9, rel=2e-3)
+
+
+def test_dynamic_range_monotone_decreasing():
+    d = [dynamic_range(n) for n in range(2, 512)]
+    assert all(a > b for a, b in zip(d, d[1:]))
+
+
+def test_t_opt_positive_and_decreasing_with_row_size():
+    # more cells in parallel -> lower match-line R -> faster optimal sensing
+    ts = [t_opt(s) for s in (16, 32, 64, 128)]
+    assert all(t > 0 for t in ts)
+    assert ts == sorted(ts, reverse=True)
+
+
+def test_t_cwd_components():
+    s = 64
+    assert t_cwd(s) == pytest.approx(
+        3 * DEFAULT_HW.tau_pchg + t_opt(s) + DEFAULT_HW.t_sa)
+
+
+def test_f_max_bounded_by_t_mem():
+    # very small arrays: T_mem dominates (Eqn 10's max(...))
+    assert f_max(4) <= 1.0 / DEFAULT_HW.t_mem + 1e-6

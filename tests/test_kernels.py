@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracle vs numpy simulator: shape/dtype sweeps
+and hypothesis property tests (interpret=True on CPU)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import CELL_MM, bitplanes
+from repro.core.synth import TCAMLayout, synthesize
+from repro.core import TernaryLUT
+from repro.kernels import (pack_bits, sa_kmax, tcam_infer, tcam_match,
+                           tcam_match_ref, tcam_match_packed_ref)
+
+
+def _random_layout(rng, rows, width, s, with_mm=False):
+    cells = rng.integers(0, 3, size=(rows, width)).astype(np.int8)
+    if with_mm:
+        mm = rng.random((rows, width)) < 0.02
+        cells[mm] = CELL_MM
+    lut = TernaryLUT(cells=cells,
+                     classes=rng.integers(0, 4, rows).astype(np.int32),
+                     n_classes=4,
+                     feat_offsets=np.array([0, width]),
+                     thresholds=[np.linspace(0, 1, width - 1)])
+    return synthesize(lut, s, seed=int(rng.integers(1 << 30)))
+
+
+SWEEP = [
+    # rows, width, s, batch
+    (9, 12, 16, 7),
+    (40, 70, 32, 33),
+    (120, 123, 64, 130),
+    (50, 200, 128, 16),
+    (300, 40, 32, 64),
+]
+
+
+@pytest.mark.parametrize("rows,width,s,b", SWEEP)
+@pytest.mark.parametrize("engine", ["mxu", "packed"])
+def test_kernel_matches_oracle(rows, width, s, b, engine):
+    if engine == "packed" and s % 32:
+        pytest.skip("packed needs S % 32 == 0")
+    rng = np.random.default_rng(rows * 7 + s)
+    lay = _random_layout(rng, rows, width, s)
+    xb = rng.integers(0, 2, size=(b, width)).astype(np.uint8)
+    xp = lay.pad_inputs(xb)
+    is0, is1 = bitplanes(lay.cells)
+    want_s, want_e = tcam_match_ref(jnp.asarray(xp), jnp.asarray(is0),
+                                    jnp.asarray(is1), s)
+    got_s, got_e = tcam_match(lay.cells, xp, s, engine=engine)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_e), np.asarray(want_e))
+
+
+def test_mm_cells_force_mxu_and_mismatch():
+    rng = np.random.default_rng(5)
+    lay = _random_layout(rng, 20, 30, 32, with_mm=True)
+    xb = rng.integers(0, 2, size=(8, 30)).astype(np.uint8)
+    xp = lay.pad_inputs(xb)
+    with pytest.raises(ValueError):
+        tcam_match(lay.cells, xp, 32, engine="packed")
+    is0, is1 = bitplanes(lay.cells)
+    want_s, _ = tcam_match_ref(jnp.asarray(xp), jnp.asarray(is0),
+                               jnp.asarray(is1), 32)
+    got_s, _ = tcam_match(lay.cells, xp, 32, engine="auto")   # falls back
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+def test_pack_bits_roundtrip_semantics():
+    rng = np.random.default_rng(7)
+    bits = rng.integers(0, 2, size=(5, 64)).astype(np.uint8)
+    packed = np.asarray(pack_bits(jnp.asarray(bits)))
+    for r in range(5):
+        for w in range(2):
+            word = int(packed[r, w])
+            for i in range(32):
+                assert ((word >> i) & 1) == bits[r, 32 * w + i]
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 99999))
+def test_property_kernel_equals_simulator(seed):
+    """PROPERTY: kernels reproduce the numpy analog simulator (survivors,
+    active evaluations, energy) for random layouts and inputs."""
+    from repro.core.simulate import simulate
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(4, 60))
+    width = int(rng.integers(4, 90))
+    s = int(rng.choice([16, 32, 64]))
+    lay = _random_layout(rng, rows, width, s)
+    xb = rng.integers(0, 2, size=(int(rng.integers(1, 40)), width)).astype(
+        np.uint8)
+    res = simulate(lay, xb)
+    preds, surv, nsurv, act, en = tcam_infer(lay, xb)
+    np.testing.assert_array_equal(np.asarray(preds), res.predictions)
+    np.testing.assert_array_equal(np.asarray(nsurv), res.n_survivors)
+    np.testing.assert_array_equal(np.asarray(act), res.active_evals)
+    np.testing.assert_allclose(np.asarray(en), res.energy_per_dec, rtol=1e-5)
+
+
+def test_sa_kmax_parity_with_analog_decision():
+    """kmax lowering == analog V_ml > V_ref + offset decision."""
+    from repro.core.simulate import (_division_mismatches, sense_voltage)
+    rng = np.random.default_rng(11)
+    lay = _random_layout(rng, 30, 45, 32)
+    xb = rng.integers(0, 2, size=(25, 45)).astype(np.uint8)
+    xp = lay.pad_inputs(xb)
+    offsets = rng.normal(0, 0.05, size=(lay.cells.shape[0], lay.n_cwd))
+    km = sa_kmax(lay, offsets)
+    got_s, got_e = tcam_match(lay.cells, xp, 32, kmax=np.asarray(km),
+                              engine="mxu")
+    counts, n_eff = _division_mismatches(lay, xp)
+    v_ml = sense_voltage(counts, n_eff[None, None, :], 32)
+    v_fm = sense_voltage(np.zeros(lay.n_cwd), n_eff, 32)
+    v_1mm = sense_voltage(np.ones(lay.n_cwd), n_eff, 32)
+    v_ref = 0.5 * (v_fm + v_1mm)
+    match = v_ml > (v_ref[None, None, :] + offsets[None, :, :])
+    prior = np.cumprod(np.concatenate(
+        [np.ones((25, match.shape[1], 1), bool), match[:, :, :-1]], 2), 2
+    ).astype(bool)
+    np.testing.assert_array_equal(
+        np.asarray(got_s).astype(bool), prior[:, :, -1] & match[:, :, -1])
+    np.testing.assert_array_equal(np.asarray(got_e), prior.sum(2))

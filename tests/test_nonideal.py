@@ -1,0 +1,55 @@
+"""Hardware non-idealities (paper §II.C.2, Table I, Fig 7)."""
+import numpy as np
+import pytest
+
+from repro.core import DT2CAM, apply_saf, noisy_inputs
+from repro.core.lut import CELL_0, CELL_1, CELL_MM, CELL_X
+from repro.dt import load_split
+
+
+def test_saf_zero_prob_identity():
+    cells = np.random.default_rng(0).integers(0, 3, (50, 40)).astype(np.int8)
+    np.testing.assert_array_equal(apply_saf(cells, 0.0, 0.0), cells)
+
+
+def test_saf_table_i_reachable_states():
+    """Table I: SA0 can turn 0/1 -> x; SA1 can create {LRS,LRS} (=CELL_MM)."""
+    rng = np.random.default_rng(1)
+    cells = np.full((200, 200), CELL_0, np.int8)
+    sa0 = apply_saf(cells, 0.5, 0.0, rng)
+    assert set(np.unique(sa0)) <= {CELL_0, CELL_X}
+    sa1 = apply_saf(cells, 0.0, 0.5, rng)
+    assert CELL_MM in np.unique(sa1)          # {LRS, LRS}
+    x_cells = np.full((200, 200), CELL_X, np.int8)
+    sa1x = apply_saf(x_cells, 0.0, 0.5, rng)
+    assert set(np.unique(sa1x)) <= {CELL_X, CELL_0, CELL_1, CELL_MM}
+
+
+def test_saf_accuracy_degrades_with_rate():
+    Xtr, ytr, Xte, yte = load_split("cancer")
+    m = DT2CAM(s=32, max_depth=8).fit(Xtr, ytr)
+    base = m.infer(Xte).accuracy(yte)
+    rng = np.random.default_rng(2)
+    accs = [np.mean([m.infer(Xte, p_sa0=p, p_sa1=p,
+                             rng=np.random.default_rng(100 + i)).accuracy(yte)
+                     for i in range(3)]) for p in (0.001, 0.05)]
+    assert accs[0] >= accs[1] - 0.02          # higher defect rate hurts more
+    assert base >= accs[1]
+
+
+def test_input_noise_changes_encoding_not_catastrophically():
+    Xtr, ytr, Xte, yte = load_split("diabetes")
+    m = DT2CAM(s=64, max_depth=8).fit(Xtr, ytr)
+    base = m.infer(Xte).accuracy(yte)
+    small = m.infer(Xte, sigma_in=0.001).accuracy(yte)
+    assert abs(base - small) < 0.1
+
+
+def test_sa_variability_monotone_in_sigma():
+    Xtr, ytr, Xte, yte = load_split("cancer")
+    m = DT2CAM(s=32, max_depth=8).fit(Xtr, ytr)
+    base = m.infer(Xte).accuracy(yte)
+    hi = np.mean([m.infer(Xte, sa_sigma=0.1,
+                          rng=np.random.default_rng(i)).accuracy(yte)
+                  for i in range(3)])
+    assert hi <= base + 1e-9

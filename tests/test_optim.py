@@ -1,0 +1,89 @@
+"""Optimizer + compression."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, dequantize_int8, ef_compress,
+                         global_norm, quantize_int8)
+from repro.optim.compress import ef_init
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                      total_steps=200)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}        # d/dw of w^2
+        params, state, m = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_grad_clip_applied():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    grads = {"w": jnp.full(4, 100.0)}
+    _, _, m = adamw_update(grads, state, params, cfg)
+    assert float(m["grad_norm"]) > 1.0        # reported pre-clip
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert abs(lrs[10] - 1.0) < 0.2
+    assert lrs[-1] < 0.2 and lrs[-1] >= 0.1 - 1e-6
+
+
+def test_bf16_moments_supported():
+    cfg = AdamWConfig(mu_dtype="bfloat16")
+    params = {"w": jnp.ones(8)}
+    state = adamw_init(params, cfg)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    p2, s2, _ = adamw_update({"w": jnp.ones(8)}, state, params, cfg)
+    assert s2.mu["w"].dtype == jnp.bfloat16
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_quantize_error_bounded(seed):
+    """PROPERTY: int8 symmetric quantization error <= scale/2 per element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64) * rng.uniform(0.01, 10))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-7
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_error_feedback_conservation(seed):
+    """PROPERTY: g_compressed + r_new == g + r_old (EF conserves mass)."""
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)}
+    r = {"a": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32) * 0.1}
+    gq, r2 = ef_compress(g, r)
+    np.testing.assert_allclose(np.asarray(gq["a"] + r2["a"]),
+                               np.asarray(g["a"] + r["a"]), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ef_reduces_bias_over_steps():
+    """EF: accumulated compressed sum tracks the true sum."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros(16)}
+    resid = ef_init(params)
+    true_sum = np.zeros(16)
+    comp_sum = np.zeros(16)
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal(16) * 0.01, jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        gq, resid = ef_compress(g, resid)
+        comp_sum += np.asarray(gq["w"])
+    residual = np.abs(true_sum - comp_sum).max()
+    assert residual <= float(jnp.abs(resid["w"]).max()) + 1e-6

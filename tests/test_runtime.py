@@ -1,0 +1,81 @@
+"""Fault-tolerance runtime: retry-from-checkpoint, stragglers, preemption."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime import FaultTolerantLoop, StragglerMonitor
+
+
+def _mk_loop(tmp_path, step_fn, **kw):
+    ckpt = CheckpointManager(str(tmp_path))
+    return FaultTolerantLoop(
+        step_fn, lambda s: {"x": np.float32(s)}, ckpt,
+        ckpt_every=2, **kw), ckpt
+
+
+def test_normal_run_checkpoints(tmp_path):
+    def step(state, batch):
+        return state + 1, {"loss": jnp.float32(1.0)}
+    loop, ckpt = _mk_loop(tmp_path, step)
+    state, step_idx, hist = loop.run(jnp.int32(0), 0, 6, log_every=0)
+    assert step_idx == 6 and int(state) == 6
+    assert ckpt.latest_step() == 6
+    assert len(hist) == 6
+
+
+def test_failure_recovers_from_checkpoint(tmp_path):
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 5:                 # simulated node failure
+            raise RuntimeError("device lost")
+        return state + 1, {"loss": jnp.float32(1.0)}
+
+    loop, ckpt = _mk_loop(tmp_path, step)
+    state, step_idx, _ = loop.run(jnp.int32(0), 0, 8, log_every=0)
+    assert step_idx == 8
+    assert int(state) == 8                  # replay restored the lost step
+    assert loop.retries == 0                # reset after success
+
+
+def test_nonfinite_loss_triggers_restore(tmp_path):
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        loss = jnp.float32(np.nan if calls["n"] == 4 else 1.0)
+        return state + 1, {"loss": loss}
+
+    loop, ckpt = _mk_loop(tmp_path, step)
+    state, step_idx, _ = loop.run(jnp.int32(0), 0, 6, log_every=0)
+    assert step_idx == 6 and int(state) == 6
+
+
+def test_bounded_retries(tmp_path):
+    def step(state, batch):
+        raise RuntimeError("always broken")
+    loop, _ = _mk_loop(tmp_path, step, max_retries=2)
+    with pytest.raises(RuntimeError):
+        loop.run(jnp.int32(0), 0, 4, log_every=0)
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    def step(state, batch):
+        return state + 1, {"loss": jnp.float32(1.0)}
+    loop, ckpt = _mk_loop(tmp_path, step)
+    state, i, _ = loop.run(jnp.int32(0), 0, 3, log_every=0)
+    loop.preempted = True                    # SIGTERM flag
+    state, j, _ = loop.run(state, i, 10, log_every=0)
+    assert j == i                            # exited immediately
+    assert ckpt.latest_step() == i
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(factor=2.0)
+    for _ in range(10):
+        assert not m.observe(1.0)
+    assert m.observe(5.0)
+    assert m.stragglers == 1

@@ -1,0 +1,52 @@
+"""Functional simulation == golden DT inference (paper §IV.B) + SP/energy."""
+import numpy as np
+import pytest
+
+from repro.core import DT2CAM
+from repro.core.energy import DEFAULT_HW, f_max, t_cwd
+from repro.dt import DATASETS, load_split
+
+
+@pytest.mark.parametrize("name,s", [("iris", 16), ("iris", 128),
+                                    ("cancer", 32), ("haberman", 64),
+                                    ("car", 16), ("diabetes", 128)])
+def test_sim_equals_golden(name, s):
+    """The paper's central validation: ReCAM-simulated accuracy == Python DT
+    accuracy under ideal hardware."""
+    spec = DATASETS[name]
+    Xtr, ytr, Xte, yte = load_split(name)
+    m = DT2CAM(s=s, max_depth=spec.max_depth).fit(Xtr, ytr)
+    res = m.infer(Xte)
+    assert res.accuracy(yte) == m.golden_accuracy(Xte, yte)
+    np.testing.assert_array_equal(res.predictions, m.golden_predict(Xte))
+    assert (res.n_survivors == 1).all()     # exactly one matching path
+
+
+def test_selective_precharge_saves_evaluations():
+    Xtr, ytr, Xte, yte = load_split("diabetes")
+    m = DT2CAM(s=16, max_depth=10).fit(Xtr, ytr)
+    with_sp = m.infer(Xte, selective_precharge=True)
+    without = m.infer(Xte, selective_precharge=False)
+    np.testing.assert_array_equal(with_sp.predictions, without.predictions)
+    assert with_sp.active_evals.sum() < without.active_evals.sum()
+    assert with_sp.mean_energy < without.mean_energy
+
+
+def test_energy_accounting():
+    Xtr, ytr, Xte, yte = load_split("iris")
+    m = DT2CAM(s=16).fit(Xtr, ytr)
+    res = m.infer(Xte)
+    want = res.active_evals.astype(float) * DEFAULT_HW.e_row + DEFAULT_HW.e_mem
+    np.testing.assert_allclose(res.energy_per_dec, want)
+
+
+def test_latency_and_throughput_model():
+    Xtr, ytr, Xte, yte = load_split("covid")
+    m = DT2CAM(s=32, max_depth=DATASETS["covid"].max_depth).fit(Xtr, ytr)
+    res = m.infer(Xte[:50])
+    assert res.latency_s == pytest.approx(
+        res.n_cwd * t_cwd(32) + DEFAULT_HW.t_mem)
+    assert res.throughput_seq == pytest.approx(f_max(32) / res.n_cwd)
+    # pipelined: one result every II=3 cycles (Fig 4 P/E/SA pipeline)
+    assert res.throughput_pipe == pytest.approx(
+        f_max(32) / DEFAULT_HW.pipeline_ii_cycles)

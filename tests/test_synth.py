@@ -1,0 +1,79 @@
+"""ReCAM synthesizer mapping step (paper §II.C.1, Table V)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import CELL_1, CELL_X, TernaryLUT, synthesize
+from repro.core.lut import CELL_0
+
+
+def _lut(rows, width, n_classes=2, seed=0):
+    rng = np.random.default_rng(seed)
+    cells = rng.integers(0, 3, size=(rows, width)).astype(np.int8)
+    return TernaryLUT(
+        cells=cells,
+        classes=rng.integers(0, n_classes, rows).astype(np.int32),
+        n_classes=n_classes,
+        feat_offsets=np.array([0, width]),
+        thresholds=[np.linspace(0, 1, width - 1)],
+    )
+
+
+# Table V: LUT size -> tiles at each S (paper's datasets)
+TABLE_V = [
+    ((9, 12), {16: (1, 1), 32: (1, 1), 64: (1, 1), 128: (1, 1)}),       # Iris
+    ((120, 123), {16: (8, 8), 32: (4, 4), 64: (2, 2), 128: (1, 1)}),    # Diabetes
+    ((93, 71), {16: (6, 5), 32: (3, 3), 64: (2, 2), 128: (1, 1)}),      # Haberman
+    ((76, 20), {16: (5, 2), 32: (3, 1), 64: (2, 1), 128: (1, 1)}),      # Car
+    ((23, 52), {16: (2, 4), 32: (1, 2), 64: (1, 1), 128: (1, 1)}),      # Cancer
+    ((8475, 3580), {16: (530, 224), 32: (265, 112), 64: (133, 56),
+                    128: (67, 28)}),                                     # Credit
+    ((191, 150), {16: (12, 10), 32: (6, 5), 64: (3, 3), 128: (2, 2)}),  # Titanic
+    ((441, 146), {16: (28, 10), 32: (14, 5), 64: (7, 3), 128: (4, 2)}), # Covid
+]
+
+
+@pytest.mark.parametrize("lut_size,expect", TABLE_V)
+def test_table_v_tile_counts(lut_size, expect):
+    """N_rwd = ceil(rows/S), N_cwd = ceil((width+1)/S) reproduce Table V for
+    the paper's LUT shapes at every S."""
+    rows, width = lut_size
+    for s, (n_rwd, n_cwd) in expect.items():
+        assert math.ceil(rows / s) == n_rwd, (lut_size, s)
+        assert math.ceil((width + 1) / s) == n_cwd, (lut_size, s)
+
+
+@pytest.mark.parametrize("rows,width,s", [(9, 12, 16), (120, 123, 32),
+                                          (23, 52, 64), (191, 150, 128)])
+def test_synthesize_layout(rows, width, s):
+    lut = _lut(rows, width)
+    lay = synthesize(lut, s)
+    assert lay.n_rwd == math.ceil(rows / s)
+    assert lay.n_cwd == math.ceil((width + 1) / s)
+    assert lay.cells.shape == (lay.n_rwd * s, lay.n_cwd * s)
+    # decoder column: LUT rows match the padded '0' input bit, rogue rows
+    # store '1' (forced mismatch)
+    np.testing.assert_array_equal(lay.cells[:rows, 0], CELL_0)
+    np.testing.assert_array_equal(lay.cells[rows:, 0], CELL_1)
+    # padding is don't-care
+    assert (lay.cells[:rows, 1 + width:] == CELL_X).all()
+    # rogue classes are valid class ids
+    assert lay.classes.min() >= 0 and lay.classes.max() < lut.n_classes
+
+
+def test_pad_inputs_decoder_bit():
+    lut = _lut(5, 7)
+    lay = synthesize(lut, 16)
+    xb = np.ones((3, 7), np.uint8)
+    xp = lay.pad_inputs(xb)
+    assert xp.shape == (3, 16)
+    assert (xp[:, 0] == 0).all()            # decoder bit
+    np.testing.assert_array_equal(xp[:, 1:8], xb)
+    assert (xp[:, 8:] == 0).all()
+
+
+def test_area_positive_and_scales():
+    small = synthesize(_lut(9, 12), 16).area_m2()
+    big = synthesize(_lut(441, 146), 16).area_m2()
+    assert 0 < small < big
