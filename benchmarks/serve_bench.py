@@ -1,0 +1,89 @@
+"""Serving-engine load benchmark: push a randomized request stream through
+``repro.serve.TCAMServer`` and dump a JSON report (throughput, p50/p99
+queue/compute/total latency, batch fill, jit compile counts, modelled ReCAM
+energy/throughput) to ``artifacts/serve_bench.json``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--requests 2048]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.dt import load_split
+from repro.serve import ServeConfig, TCAMServer
+
+from .common import ART, compiled
+
+
+def run(
+    datasets: tuple[str, ...] = ("iris", "cancer", "covid"),
+    *,
+    requests: int = 2048,
+    s: int = 64,
+    max_batch: int = 128,
+    max_delay_ms: float = 2.0,
+    engine: str = "auto",
+    seed: int = 0,
+) -> list[dict]:
+    reports = []
+    rng = np.random.default_rng(seed)
+    for name in datasets:
+        c, (Xtr, ytr, Xte, yte) = compiled(name, s)
+        cfg = ServeConfig(max_batch=max_batch, max_delay_s=max_delay_ms / 1e3,
+                          engine=engine)
+        # randomized arrival order + duplicate queries, like real traffic
+        idx = rng.integers(0, len(Xte), size=requests)
+        t0 = time.perf_counter()
+        with TCAMServer(c, config=cfg) as server:
+            server.warmup()
+            results = server.serve(Xte[idx])
+            stats = server.metrics()
+        wall = time.perf_counter() - t0
+        preds = np.array([r.prediction for r in results])
+        stats.update(
+            dataset=name,
+            s=s,
+            wall_s=wall,
+            throughput_rps=len(results) / wall,
+            accuracy=float((preds == yte[idx]).mean()),
+        )
+        reports.append(stats)
+    return reports
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", nargs="+", default=["iris", "cancer", "covid"])
+    ap.add_argument("--requests", type=int, default=2048)
+    ap.add_argument("--s", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=128)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--engine", default="auto")
+    ap.add_argument("--out", default=os.path.join(ART, "serve_bench.json"))
+    args = ap.parse_args(argv)
+
+    reports = run(tuple(args.datasets), requests=args.requests, s=args.s,
+                  max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
+                  engine=args.engine)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(reports, f, indent=2)
+    for r in reports:
+        print(f"{r['dataset']:>8}: {r['throughput_rps']:8.0f} req/s  "
+              f"total p50/p99 {r['total_latency']['p50_ms']:6.2f}/"
+              f"{r['total_latency']['p99_ms']:6.2f} ms  "
+              f"fill {r['mean_batch_fill']:.2f}  "
+              f"compiles {r['jit_cache']['misses']}  "
+              f"{r['modelled_nj_per_dec']:.4f} nJ/dec  "
+              f"acc {r['accuracy']:.4f}")
+    print(f"# wrote {args.out}")
+    return reports
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ the TCAM-simulated accuracy equals the Python golden-DT accuracy.
 """
 import numpy as np
 
-from repro.core import DT2CAM
+from repro.core import DT2CAM, NonIdealSpec
 from repro.dt import load_split
 
 
@@ -37,7 +37,7 @@ def main():
           f"{res.throughput_pipe / 1e6:.1f} M dec/s pipelined")
 
     # robustness: stuck-at faults
-    faulty = model.infer(Xte, p_sa0=0.01, p_sa1=0.01)
+    faulty = model.infer(Xte, nonideal=NonIdealSpec(p_sa0=0.01, p_sa1=0.01))
     print(f"accuracy w/ 1% SAF : {faulty.accuracy(yte):.4f}")
 
 

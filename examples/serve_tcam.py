@@ -4,10 +4,13 @@ parallel ternary match).
 
     PYTHONPATH=src python examples/serve_tcam.py [--dataset covid] [--s 64]
 
-The serving path runs the jit'd Pallas-backed ``tcam_infer`` (bit-packed
-engine when legal), batches incoming requests, and reports accuracy, energy
-and modelled hardware throughput per batch — numbers consistent with
-``core.simulate`` bit-for-bit.
+Requests are pushed one at a time into a ``repro.serve.TCAMServer`` — the
+production engine: adaptive batch formation (flush on max-batch or deadline),
+padding-bucket batching with a warm jit compile cache, automatic engine
+selection (bit-packed kernel when legal, MXU bitplane kernel otherwise) and a
+metrics layer.  The printout reports accuracy, serving latency percentiles,
+and the modelled ReCAM energy/throughput — consistent bit-for-bit with
+``core.simulate`` / ``DT2CAM.infer``.
 """
 import argparse
 import time
@@ -15,18 +18,19 @@ import time
 import numpy as np
 
 from repro.core import compile_tree, train_tree
-from repro.core.encode import encode_inputs
-from repro.core.energy import DEFAULT_HW, f_max
 from repro.dt import DATASETS, load_split
-from repro.kernels import tcam_infer
+from repro.serve import ServeConfig, TCAMServer
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="covid")
     ap.add_argument("--s", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=128)
-    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=1024)
+    ap.add_argument("--max-batch", type=int, default=128)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "mxu", "packed", "ref"])
     args = ap.parse_args()
 
     spec = DATASETS[args.dataset]
@@ -38,27 +42,34 @@ def main():
     print(f"{args.dataset}: LUT {c.lut.n_rows}x{c.lut.width}, "
           f"{lay.n_rwd}x{lay.n_cwd} tiles of {args.s}x{args.s}")
 
-    served = correct = 0
-    energy = 0.0
+    cfg = ServeConfig(max_batch=args.max_batch,
+                      max_delay_s=args.max_delay_ms / 1e3,
+                      engine=args.engine)
+    idx = np.arange(args.requests) % len(Xte)
     t0 = time.perf_counter()
-    for i in range(args.batches):
-        lo = (i * args.batch) % max(1, len(Xte) - args.batch)
-        req, lab = Xte[lo:lo + args.batch], yte[lo:lo + args.batch]
-        xb = encode_inputs(c.lut, req)
-        preds, surv, nsurv, evals, e = tcam_infer(lay, xb)
-        served += len(req)
-        correct += int((np.asarray(preds) == lab).sum())
-        energy += float(np.asarray(e).sum())
+    with TCAMServer(c, config=cfg) as server:
+        print(f"engine: {server.engine}, buckets: {server.policy.buckets}, "
+              f"warmed {server.warmup()} compiles")
+        results = server.serve(Xte[idx])
+        stats = server.metrics()
     dt = time.perf_counter() - t0
 
-    hw_thpt = f_max(args.s) / lay.n_cwd
-    print(f"served {served} requests in {dt:.2f}s "
-          f"(functional sim on CPU)")
-    print(f"accuracy: {correct / served:.4f}")
-    print(f"modelled ReCAM: {energy / served * 1e9:.4f} nJ/dec, "
-          f"{hw_thpt / 1e6:.1f} M dec/s sequential, "
-          f"{f_max(args.s) / DEFAULT_HW.pipeline_ii_cycles / 1e6:.0f} "
-          f"M dec/s pipelined")
+    preds = np.array([r.prediction for r in results])
+    acc = float((preds == yte[idx]).mean())
+    print(f"served {len(results)} requests in {dt:.2f}s "
+          f"({len(results) / dt:.0f} req/s functional sim on "
+          f"{'CPU' if cfg.interpret is not False else 'TPU'}) "
+          f"in {stats['batches']} batches "
+          f"(fill {stats['mean_batch_fill']:.2f}, "
+          f"jit compiles {stats['jit_cache']['misses']})")
+    print(f"accuracy: {acc:.4f}")
+    print(f"queue   p50/p99: {stats['queue_latency']['p50_ms']:.2f}/"
+          f"{stats['queue_latency']['p99_ms']:.2f} ms")
+    print(f"compute p50/p99: {stats['compute_latency']['p50_ms']:.2f}/"
+          f"{stats['compute_latency']['p99_ms']:.2f} ms")
+    print(f"modelled ReCAM: {stats['modelled_nj_per_dec']:.4f} nJ/dec, "
+          f"{stats['modelled_mdecs_seq']:.1f} M dec/s sequential, "
+          f"{stats['modelled_mdecs_pipe']:.0f} M dec/s pipelined")
 
 
 if __name__ == "__main__":

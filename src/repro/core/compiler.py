@@ -7,6 +7,7 @@ whole framework is one call from raw data.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -15,12 +16,45 @@ from .cart import DecisionTree, predict, train_tree
 from .encode import encode_inputs, encode_table
 from .energy import DEFAULT_HW, HardwareParams
 from .lut import TernaryLUT
-from .nonideal import apply_saf, noisy_inputs
+from .nonideal import IDEAL, NonIdealSpec, apply_saf, noisy_inputs
 from .reduce import RuleTable, reduce_tree
 from .simulate import SimResult, simulate
 from .synth import TCAMLayout, synthesize
 
 __all__ = ["CompiledDT", "compile_tree", "DT2CAM"]
+
+BACKENDS = ("sim", "jax")
+
+
+def _resolve_nonideal(
+    nonideal: Optional[NonIdealSpec],
+    p_sa0: Optional[float],
+    p_sa1: Optional[float],
+    sa_sigma: Optional[float],
+    sigma_in: Optional[float],
+) -> NonIdealSpec:
+    """Merge the new ``nonideal=NonIdealSpec(...)`` argument with the
+    deprecated flat keywords (one-release shim)."""
+    legacy = {
+        k: v
+        for k, v in dict(p_sa0=p_sa0, p_sa1=p_sa1, sa_sigma=sa_sigma,
+                         sigma_in=sigma_in).items()
+        if v is not None
+    }
+    if legacy:
+        warnings.warn(
+            f"DT2CAM.infer({', '.join(sorted(legacy))}=...) keywords are "
+            "deprecated; pass nonideal=NonIdealSpec(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        if nonideal is not None:
+            raise TypeError(
+                "pass either nonideal=NonIdealSpec(...) or the deprecated "
+                "flat keywords, not both"
+            )
+        return NonIdealSpec(**legacy)
+    return nonideal if nonideal is not None else IDEAL
 
 
 @dataclasses.dataclass
@@ -85,32 +119,76 @@ class DT2CAM:
     def golden_accuracy(self, X: np.ndarray, y: np.ndarray) -> float:
         return float((self.golden_predict(X) == np.asarray(y)).mean())
 
-    # -- hardware-functional inference --
+    # -- hardware-functional inference (unified front door) --
     def infer(
         self,
         X: np.ndarray,
         *,
+        backend: str = "sim",
+        engine: str = "auto",
+        nonideal: Optional[NonIdealSpec] = None,
         selective_precharge: bool = True,
-        p_sa0: float = 0.0,
-        p_sa1: float = 0.0,
-        sa_sigma: float = 0.0,
-        sigma_in: float = 0.0,
         rng: Optional[np.random.Generator] = None,
+        interpret: Optional[bool] = None,
+        # deprecated flat non-ideality keywords (one-release shim):
+        p_sa0: Optional[float] = None,
+        p_sa1: Optional[float] = None,
+        sa_sigma: Optional[float] = None,
+        sigma_in: Optional[float] = None,
     ) -> SimResult:
+        """Run hardware-functional inference and return a ``SimResult``.
+
+        backend='sim' evaluates on the numpy oracle (``core.simulate``);
+        backend='jax' runs the jit'd Pallas kernels (``kernels.tcam_infer``)
+        — bit-identical results on ideal hardware, and identical under
+        non-idealities too when seeded with the same ``rng`` (the SA-offset
+        draw order matches and the kmax lowering is exact).
+
+        engine / interpret only apply to backend='jax' ('auto' picks the
+        bit-packed kernel when legal, else the MXU bitplane kernel).
+        """
         assert self.compiled is not None, "call fit() first"
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of {BACKENDS}"
+            )
+        spec = _resolve_nonideal(nonideal, p_sa0, p_sa1, sa_sigma, sigma_in)
         rng = rng or np.random.default_rng(self.seed)
         layout = self.compiled.layout
-        if p_sa0 > 0 or p_sa1 > 0:
+        if spec.has_saf:
             layout = dataclasses.replace(
-                layout, cells=apply_saf(layout.cells, p_sa0, p_sa1, rng)
+                layout, cells=apply_saf(layout.cells, spec.p_sa0, spec.p_sa1, rng)
             )
-        Xn = noisy_inputs(X, sigma_in, rng)
+        Xn = noisy_inputs(X, spec.sigma_in, rng)
         xbits = encode_inputs(self.compiled.lut, Xn)
-        return simulate(
+
+        if backend == "sim":
+            return simulate(
+                layout,
+                xbits,
+                hw=self.hw,
+                selective_precharge=selective_precharge,
+                sa_sigma=spec.sa_sigma,
+                rng=rng,
+            )
+
+        # backend == "jax": lazy import keeps repro.core importable without jax
+        from ..kernels import sa_kmax, tcam_infer
+
+        kmax = None
+        if spec.sa_sigma > 0:
+            # same draw (shape and rng position) as simulate's offsets
+            offsets = rng.normal(
+                0.0, spec.sa_sigma,
+                size=(layout.cells.shape[0], layout.n_cwd),
+            )
+            kmax = sa_kmax(layout, offsets, self.hw)
+        return tcam_infer(
             layout,
             xbits,
             hw=self.hw,
+            kmax=kmax,
+            engine=engine,
             selective_precharge=selective_precharge,
-            sa_sigma=sa_sigma,
-            rng=rng,
+            interpret=interpret,
         )

@@ -12,13 +12,53 @@ Three mechanisms:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import numpy as np
 
 from .lut import CELL_0, CELL_1, CELL_MM, CELL_X
 
-__all__ = ["apply_saf", "noisy_inputs", "CELL_TO_PAIR"]
+__all__ = ["NonIdealSpec", "IDEAL", "apply_saf", "noisy_inputs", "CELL_TO_PAIR"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NonIdealSpec:
+    """One object grouping the paper's three non-ideality mechanisms.
+
+    Replaces the sprawling ``p_sa0/p_sa1/sa_sigma/sigma_in`` keyword lists on
+    the inference entry points (``DT2CAM.infer`` keeps backward-compatible
+    keyword shims for one release).
+
+    p_sa0 / p_sa1: per-resistive-element stuck-at-HRS / stuck-at-LRS fault
+        probabilities (Table I).
+    sa_sigma: sense-amplifier V_ref manufacturing variability σ [V].
+    sigma_in: input-encoding noise σ on normalized features.
+    """
+
+    p_sa0: float = 0.0
+    p_sa1: float = 0.0
+    sa_sigma: float = 0.0
+    sigma_in: float = 0.0
+
+    def __post_init__(self) -> None:
+        for f in ("p_sa0", "p_sa1", "sa_sigma", "sigma_in"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be >= 0")
+        if self.p_sa0 + self.p_sa1 > 1.0:
+            raise ValueError("p_sa0 + p_sa1 must be <= 1")
+
+    @property
+    def is_ideal(self) -> bool:
+        return (self.p_sa0 == 0 and self.p_sa1 == 0
+                and self.sa_sigma == 0 and self.sigma_in == 0)
+
+    @property
+    def has_saf(self) -> bool:
+        return self.p_sa0 > 0 or self.p_sa1 > 0
+
+
+IDEAL = NonIdealSpec()
 
 # cell state -> (R1 is LRS?, R2 is LRS?) — Table I encoding
 CELL_TO_PAIR = {

@@ -9,13 +9,15 @@ analog-ReCAM -> TPU mapping.
                    jit'd serving path
   ref.py         — pure-jnp oracles both kernels are validated against
 """
-from .ops import default_interpret, sa_kmax, tcam_infer, tcam_match
+from .ops import (ENGINES, default_interpret, finalize_result, sa_kmax,
+                  select_engine, tcam_infer, tcam_match)
 from .ref import pack_bits, tcam_match_packed_ref, tcam_match_ref
 from .tcam_match import tcam_match_pallas
 from .tcam_packed import tcam_match_packed_pallas
 
 __all__ = [
-    "default_interpret", "sa_kmax", "tcam_infer", "tcam_match",
+    "ENGINES", "default_interpret", "finalize_result", "sa_kmax",
+    "select_engine", "tcam_infer", "tcam_match",
     "pack_bits", "tcam_match_packed_ref", "tcam_match_ref",
     "tcam_match_pallas", "tcam_match_packed_pallas",
 ]

@@ -22,19 +22,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.energy import DEFAULT_HW, HardwareParams
+from ..core.energy import DEFAULT_HW, HardwareParams, f_max, t_cwd
 from ..core.lut import CELL_MM, bitplanes
-from ..core.simulate import sense_voltage
+from ..core.simulate import SimResult, sense_voltage
 from ..core.synth import TCAMLayout
 from .ref import pack_bits, tcam_match_packed_ref, tcam_match_ref
 from .tcam_match import tcam_match_pallas
 from .tcam_packed import tcam_match_packed_pallas
 
-__all__ = ["tcam_match", "tcam_infer", "sa_kmax", "default_interpret"]
+__all__ = ["tcam_match", "tcam_infer", "sa_kmax", "select_engine",
+           "finalize_result", "default_interpret", "ENGINES"]
+
+ENGINES = ("auto", "mxu", "packed", "ref")
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def select_engine(cells: np.ndarray, s: int, engine: str = "auto") -> str:
+    """Resolve an engine request against the layout's legality constraints.
+
+    'auto' picks 'packed' (16x fewer HBM bytes) when legal — S % 32 == 0 and
+    no SAF-induced CELL_MM cells (unrepresentable in packed bitplanes) — else
+    'mxu'.  An explicit illegal 'packed' request raises.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+    has_mm = bool(np.any(np.asarray(cells) == CELL_MM))
+    packed_ok = s % 32 == 0 and not has_mm
+    if engine == "auto":
+        return "packed" if packed_ok else "mxu"
+    if engine == "packed" and not packed_ok:
+        raise ValueError("packed engine needs S % 32 == 0 and no CELL_MM cells")
+    return engine
 
 
 def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -65,11 +86,7 @@ def tcam_match(
     b = xpad.shape[0]
     d = w // s
     assert w % s == 0
-    has_mm = bool(np.any(np.asarray(cells) == CELL_MM))
-    if engine == "auto":
-        engine = "packed" if (s % 32 == 0 and not has_mm) else "mxu"
-    if engine == "packed" and (s % 32 != 0 or has_mm):
-        raise ValueError("packed engine needs S % 32 == 0 and no CELL_MM cells")
+    engine = select_engine(cells, s, engine)
 
     kmax = jnp.zeros((r, d), jnp.int32) if kmax is None else kmax.astype(jnp.int32)
     is0np, is1np = bitplanes(np.asarray(cells))
@@ -140,15 +157,53 @@ def sa_kmax(
     return kmax.astype(np.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("e_row", "e_mem"))
-def _finalize(survive, evals, classes, e_row: float, e_mem: float):
+@jax.jit
+def _finalize(survive, evals, classes):
     n_survivors = survive.sum(axis=1).astype(jnp.int32)
     first = jnp.argmax(survive, axis=1).astype(jnp.int32)
     survivors = jnp.where(n_survivors > 0, first, -1)
     preds = jnp.where(n_survivors > 0, classes[jnp.maximum(survivors, 0)], 0)
     active_evals = evals.sum(axis=1)
-    energy = active_evals.astype(jnp.float32) * e_row + e_mem
-    return preds.astype(jnp.int32), survivors, n_survivors, active_evals, energy
+    return preds.astype(jnp.int32), survivors, n_survivors, active_evals
+
+
+def finalize_result(
+    layout: TCAMLayout,
+    preds: np.ndarray,
+    survivors: np.ndarray,
+    n_survivors: np.ndarray,
+    active_evals: np.ndarray,
+    *,
+    hw: HardwareParams = DEFAULT_HW,
+    selective_precharge: bool = True,
+) -> SimResult:
+    """Assemble the kernel outputs into a ``SimResult``.
+
+    Energy/latency/throughput use the exact float64 formulas of the numpy
+    oracle (``core.simulate.simulate``) on the integer activity counts, so the
+    JAX path is bit-identical to the oracle on ideal hardware — not merely
+    numerically close.
+    """
+    b = preds.shape[0]
+    if selective_precharge:
+        active = np.asarray(active_evals).astype(np.int64)
+    else:
+        active = np.full(b, layout.cells.shape[0] * layout.n_cwd, np.int64)
+    energy = active.astype(np.float64) * hw.e_row + hw.e_mem
+    fm = f_max(layout.s, hw)
+    return SimResult(
+        predictions=np.asarray(preds).astype(np.int32),
+        survivors=np.asarray(survivors).astype(np.int32),
+        n_survivors=np.asarray(n_survivors).astype(np.int32),
+        active_evals=active,
+        energy_per_dec=energy,
+        latency_s=layout.n_cwd * t_cwd(layout.s, hw) + hw.t_mem,
+        throughput_seq=fm / layout.n_cwd,
+        throughput_pipe=fm / hw.pipeline_ii_cycles,
+        s=layout.s,
+        n_cwd=layout.n_cwd,
+        n_rwd=layout.n_rwd,
+    )
 
 
 def tcam_infer(
@@ -158,17 +213,28 @@ def tcam_infer(
     hw: HardwareParams = DEFAULT_HW,
     kmax: Optional[np.ndarray] = None,
     engine: str = "auto",
+    selective_precharge: bool = True,
     interpret: Optional[bool] = None,
-):
-    """JAX serving path: encoded inputs -> (predictions, survivors,
-    n_survivors, active_evals, energy_per_dec).  Functionally identical to
-    ``core.simulate.simulate`` (tested bit-exact) but runs on the Pallas
-    kernels."""
+) -> SimResult:
+    """JAX serving path: encoded inputs -> ``SimResult``.  Functionally
+    identical to ``core.simulate.simulate`` (tested bit-exact) but runs the
+    match on the Pallas kernels.
+
+    .. deprecated:: 0.6
+       This used to return the bare 5-tuple (predictions, survivors,
+       n_survivors, active_evals, energy_per_dec); tuple-unpacking the
+       returned ``SimResult`` still works for one release (with a
+       DeprecationWarning) via ``SimResult.__iter__``.
+    """
     xpad = jnp.asarray(layout.pad_inputs(np.asarray(xbits, np.uint8)))
     km = None if kmax is None else jnp.asarray(kmax)
     survive, evals = tcam_match(
         layout.cells, xpad, layout.s, km, engine=engine, interpret=interpret
     )
-    return _finalize(
-        survive, evals, jnp.asarray(layout.classes), hw.e_row, hw.e_mem
+    preds, survivors, n_survivors, active = _finalize(
+        survive, evals, jnp.asarray(layout.classes)
+    )
+    return finalize_result(
+        layout, preds, survivors, n_survivors, active,
+        hw=hw, selective_precharge=selective_precharge,
     )

@@ -1,0 +1,28 @@
+"""Production serving engine for compiled DT2CAM models.
+
+The paper's headline figure — hundreds of millions of decisions per second,
+pipelined — is a *serving* claim; this package is the deployment half of the
+reproduction: a batched streaming inference engine on the Pallas TCAM
+kernels, reachable from one line:
+
+    >>> from repro.serve import TCAMServer
+    >>> with TCAMServer(model.compiled) as server:
+    ...     preds = [r.prediction for r in server.serve(X)]
+    ...     stats = server.metrics()
+
+  engine.py   — TCAMServer: queue, worker, futures, engine fallback, metrics
+  batching.py — BucketPolicy (padded batch shapes) + AdaptiveBatcher
+                (flush on max-batch or deadline)
+  cache.py    — CompileCache: one jit compile per (bucket, engine, layout)
+  metrics.py  — counters + p50/p99 latency + modelled nJ/dec, M dec/s
+"""
+from .batching import AdaptiveBatcher, BucketPolicy
+from .cache import CompileCache
+from .engine import RequestResult, ServeConfig, TCAMServer
+from .metrics import LatencyStats, ServeMetrics
+
+__all__ = [
+    "AdaptiveBatcher", "BucketPolicy", "CompileCache",
+    "RequestResult", "ServeConfig", "TCAMServer",
+    "LatencyStats", "ServeMetrics",
+]

@@ -1,0 +1,95 @@
+"""Adaptive batch formation for the TCAM serving engine.
+
+Two pure-logic pieces (no threads, injected clock — unit-testable):
+
+* ``BucketPolicy`` — the fixed ladder of padded batch shapes.  Every batch is
+  zero-padded up to the smallest bucket that fits, so the jit compile cache
+  sees a bounded set of input shapes: at most ``len(buckets)`` compiles per
+  (engine, layout), no matter what request sizes arrive.
+* ``AdaptiveBatcher`` — a FIFO of pending requests with the classic serving
+  flush rule: emit a batch as soon as ``max_batch`` requests are waiting
+  (throughput bound) or the *oldest* pending request has waited
+  ``max_delay_s`` (tail-latency bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Optional
+
+__all__ = ["BucketPolicy", "AdaptiveBatcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Power-of-two padding buckets ``min_bucket, 2·min_bucket, ..`` capped
+    (and always terminated) at ``max_batch``."""
+
+    max_batch: int = 256
+    min_bucket: int = 8
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1 or self.min_bucket < 1:
+            raise ValueError("max_batch and min_bucket must be >= 1")
+        if self.min_bucket > self.max_batch:
+            raise ValueError("min_bucket must be <= max_batch")
+
+    @property
+    def buckets(self) -> tuple[int, ...]:
+        out = []
+        b = self.min_bucket
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return tuple(out)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n (n must be <= max_batch)."""
+        if not 1 <= n <= self.max_batch:
+            raise ValueError(f"batch size {n} outside [1, {self.max_batch}]")
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.max_batch  # unreachable; keeps mypy honest
+
+
+@dataclasses.dataclass
+class _Pending:
+    item: Any
+    t_enqueue: float
+
+
+class AdaptiveBatcher:
+    """FIFO with flush-on-max-batch-or-deadline semantics."""
+
+    def __init__(self, max_batch: int, max_delay_s: float) -> None:
+        if max_delay_s < 0:
+            raise ValueError("max_delay_s must be >= 0")
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self._q: Deque[_Pending] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def add(self, item: Any, now: float) -> None:
+        self._q.append(_Pending(item, now))
+
+    def deadline(self) -> Optional[float]:
+        """Wall time at which the oldest pending request must be flushed,
+        or None when the queue is empty."""
+        if not self._q:
+            return None
+        return self._q[0].t_enqueue + self.max_delay_s
+
+    def ready(self, now: float) -> bool:
+        if not self._q:
+            return False
+        return len(self._q) >= self.max_batch or now >= self.deadline()
+
+    def pop_batch(self) -> list[_Pending]:
+        """Pop up to ``max_batch`` oldest pending requests (possibly fewer —
+        a deadline flush takes whatever is waiting)."""
+        n = min(len(self._q), self.max_batch)
+        return [self._q.popleft() for _ in range(n)]

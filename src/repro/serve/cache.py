@@ -1,0 +1,53 @@
+"""Warm compile cache for the serving engine.
+
+jit recompiles are the serving tail-latency killer: every new input shape
+costs a trace + XLA compile (hundreds of ms in interpret mode, more on TPU).
+The engine therefore funnels every batch through a ``BucketPolicy`` shape and
+memoizes one compiled callable per ``(bucket, engine, layout_id)``.  Total
+compiles over a server's lifetime are bounded by
+``len(buckets) x len(engines)`` per layout — the serve smoke test asserts
+exactly this via the hit/miss counters kept here.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+__all__ = ["CompileCache"]
+
+
+class CompileCache:
+    """Memoize compiled batch functions keyed ``(bucket, engine, layout_id)``.
+
+    ``builder(bucket, engine)`` is invoked exactly once per distinct key (the
+    layout is fixed per cache instance; ``layout_id`` keys guard against
+    accidental sharing across layouts).  Thread-safe: the builder runs under
+    the cache lock so concurrent workers never double-compile a key.
+    """
+
+    def __init__(self, builder: Callable[[int, str], Callable[..., Any]],
+                 layout_id: str) -> None:
+        self._builder = builder
+        self._layout_id = layout_id
+        self._fns: dict[tuple[int, str, str], Callable[..., Any]] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, bucket: int, engine: str) -> Callable[..., Any]:
+        key = (bucket, engine, self._layout_id)
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is None:
+                self.misses += 1
+                fn = self._builder(bucket, engine)
+                self._fns[key] = fn
+            else:
+                self.hits += 1
+            return fn
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "size": len(self)}

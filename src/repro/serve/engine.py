@@ -1,0 +1,373 @@
+"""Batched streaming TCAM inference server.
+
+``TCAMServer`` turns a compiled DT2CAM model into a production-style serving
+engine on the Pallas kernels:
+
+* request queue with adaptive batch formation — flush on max-batch fill or on
+  the oldest request hitting its queueing deadline (``batching.py``);
+* padding-bucket batching — every batch is zero-padded to a fixed ladder of
+  shapes so jit recompiles are bounded by ``len(buckets) x engines``;
+* warm compile cache keyed ``(bucket, engine, layout_id)`` (``cache.py``);
+* engine selection ('auto'/'mxu'/'packed'/'ref') with automatic fallback to
+  'mxu' when the packed engine is illegal for the layout;
+* metrics — requests served, p50/p99 queue/compute/total latency, compile
+  cache hits/misses, modelled nJ/decision and M decisions/s (``metrics.py``).
+
+Chip-static non-idealities (stuck-at faults, SA V_ref offsets) are sampled
+once at server construction — that is what a physical deployment looks like:
+one faulty chip serving many queries.  Per-query input noise (σ_in) is drawn
+per batch.
+
+Run ``background=True`` (default) for a worker thread + Future-based
+completion, or ``background=False`` for deterministic single-threaded tests
+via ``pump()``/``drain()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+import warnings
+from concurrent.futures import Future
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compiler import CompiledDT
+from ..core.encode import encode_inputs
+from ..core.energy import DEFAULT_HW, HardwareParams, f_max
+from ..core.nonideal import IDEAL, NonIdealSpec, apply_saf
+from ..kernels.ops import _finalize, sa_kmax, select_engine, tcam_match
+from .batching import AdaptiveBatcher, BucketPolicy
+from .cache import CompileCache
+from .metrics import ServeMetrics
+
+__all__ = ["ServeConfig", "RequestResult", "TCAMServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the serving engine (see module docstring)."""
+
+    max_batch: int = 256          # flush as soon as this many are pending
+    max_delay_s: float = 0.002    # oldest-request queueing deadline
+    min_bucket: int = 8           # smallest padded batch shape
+    engine: str = "auto"          # 'auto' | 'mxu' | 'packed' | 'ref'
+    interpret: Optional[bool] = None   # Pallas interpret mode (None = auto)
+    background: bool = True       # worker thread vs explicit pump()/drain()
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Per-request outcome: the decision plus its serving/modelled-hw cost."""
+
+    prediction: int
+    survivor: int                 # surviving TCAM row (-1: no match)
+    n_survivors: int
+    active_evals: int             # modelled active row-division evaluations
+    energy_j: float               # modelled ReCAM energy for this decision
+    queue_s: float                # enqueue -> batch formation
+    compute_s: float              # batch dispatch -> results ready
+    bucket: int                   # padded batch shape it rode in
+    engine: str
+
+    @property
+    def total_s(self) -> float:
+        return self.queue_s + self.compute_s
+
+
+@dataclasses.dataclass
+class _Request:
+    x: np.ndarray
+    future: Future
+
+
+class TCAMServer:
+    """Serve a stream of classification requests on a compiled DT2CAM model.
+
+    >>> server = TCAMServer(model.compiled)
+    >>> fut = server.submit(x_row)          # -> concurrent.futures.Future
+    >>> fut.result().prediction
+    >>> server.metrics()["compute_latency"]["p99_ms"]
+    >>> server.close()
+    """
+
+    def __init__(
+        self,
+        compiled: CompiledDT,
+        *,
+        hw: HardwareParams = DEFAULT_HW,
+        nonideal: NonIdealSpec = IDEAL,
+        config: ServeConfig = ServeConfig(),
+        rng: Optional[np.random.Generator] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> None:
+        self._lut = compiled.lut
+        self._hw = hw
+        self._config = config
+        self._spec = nonideal
+        self._clock = clock
+        self._rng = rng or np.random.default_rng(0)
+
+        # -- chip-static non-idealities: sampled once per server ----------
+        layout = compiled.layout
+        if nonideal.has_saf:
+            layout = dataclasses.replace(
+                layout,
+                cells=apply_saf(
+                    layout.cells, nonideal.p_sa0, nonideal.p_sa1, self._rng
+                ),
+            )
+        self._layout = layout
+        self._kmax: Optional[np.ndarray] = None
+        if nonideal.sa_sigma > 0:
+            offsets = self._rng.normal(
+                0.0, nonideal.sa_sigma,
+                size=(layout.cells.shape[0], layout.n_cwd),
+            )
+            self._kmax = sa_kmax(layout, offsets, hw)
+
+        self.metrics_store = ServeMetrics()
+        self.engine = self._resolve_engine(config.engine)
+
+        self.policy = BucketPolicy(
+            max_batch=config.max_batch, min_bucket=config.min_bucket
+        )
+        layout_id = hashlib.sha1(
+            self._layout.cells.tobytes() + bytes([self._layout.s % 251])
+        ).hexdigest()[:12]
+        self.cache = CompileCache(self._build, layout_id)
+
+        self._batcher = AdaptiveBatcher(config.max_batch, config.max_delay_s)
+        self._cond = threading.Condition()
+        self._outstanding = 0
+        self._stop = False
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        if config.background:
+            self._thread = threading.Thread(
+                target=self._worker, name="tcam-serve", daemon=True
+            )
+            self._thread.start()
+
+    # -- engine & compile machinery ---------------------------------------
+    def _resolve_engine(self, requested: str) -> str:
+        try:
+            return select_engine(self._layout.cells, self._layout.s, requested)
+        except ValueError as e:
+            if requested != "packed":
+                raise
+            # explicit packed on an illegal layout: serve anyway on mxu
+            warnings.warn(
+                f"requested engine 'packed' is illegal for this layout "
+                f"({e}); falling back to 'mxu'",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+            self.metrics_store.on_fallback()
+            return "mxu"
+
+    def _build(self, bucket: int, engine: str):
+        """One jit'd batch function per (bucket, engine): (bucket, W) padded
+        search words -> (preds, survivors, n_survivors, active_evals)."""
+        layout, kmax = self._layout, self._kmax
+        interpret = self._config.interpret
+        classes = jnp.asarray(layout.classes)
+        km = None if kmax is None else jnp.asarray(kmax)
+
+        @jax.jit
+        def run(xpad: jax.Array):
+            survive, evals = tcam_match(
+                layout.cells, xpad, layout.s, km,
+                engine=engine, interpret=interpret,
+            )
+            return _finalize(survive, evals, classes)
+
+        return run
+
+    def warmup(self) -> int:
+        """Pre-compile every bucket shape for the resolved engine so no
+        request ever pays the trace+compile cost; returns #compiles."""
+        before = self.cache.misses
+        for b in self.policy.buckets:
+            fn = self.cache.get(b, self.engine)
+            w = self._layout.n_cwd * self._layout.s
+            jax.block_until_ready(fn(jnp.zeros((b, w), jnp.uint8)))
+        return self.cache.misses - before
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, x: np.ndarray) -> Future:
+        """Enqueue one feature vector; the Future resolves to a
+        ``RequestResult`` once its batch has been served."""
+        fut: Future = Future()
+        req = _Request(np.asarray(x, np.float64), fut)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("server is closed")
+            self._batcher.add(req, self._clock())
+            self._outstanding += 1
+            self.metrics_store.on_enqueue()
+            self._cond.notify_all()
+        return fut
+
+    def submit_many(self, X: np.ndarray) -> list[Future]:
+        return [self.submit(row) for row in np.asarray(X)]
+
+    # -- batch formation & execution ---------------------------------------
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                now = self._clock()
+                while not self._stop and not self._batcher.ready(now):
+                    dl = self._batcher.deadline()
+                    self._cond.wait(
+                        None if dl is None else max(0.0, dl - now)
+                    )
+                    now = self._clock()
+                if self._stop and not len(self._batcher):
+                    return
+                deadline_flush = len(self._batcher) < self._config.max_batch
+                batch = self._batcher.pop_batch()
+            if batch:
+                self._process(batch, deadline_flush)
+
+    def pump(self, *, force: bool = False) -> int:
+        """Synchronous mode: process at most one due batch (``force=True``
+        flushes regardless of deadline); returns #requests served."""
+        with self._cond:
+            now = self._clock()
+            due = self._batcher.ready(now) or (force and len(self._batcher))
+            if not due:
+                return 0
+            deadline_flush = len(self._batcher) < self._config.max_batch
+            batch = self._batcher.pop_batch()
+        if not batch:
+            return 0
+        self._process(batch, deadline_flush)
+        return len(batch)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has been served."""
+        if self._thread is None:
+            while self.pump(force=True):
+                pass
+            return
+        with self._cond:
+            if not self._cond.wait_for(
+                lambda: self._outstanding == 0, timeout
+            ):
+                raise TimeoutError("drain timed out")
+
+    def _process(self, batch: list, deadline_flush: bool) -> None:
+        try:
+            self._process_inner(batch, deadline_flush)
+        except Exception as e:
+            # fail the batch's futures instead of hanging drain(); the worker
+            # thread survives to serve subsequent batches.
+            for p in batch:
+                if not p.item.future.done():
+                    p.item.future.set_exception(e)
+            with self._cond:
+                self._outstanding -= len(batch)
+                self._cond.notify_all()
+            if self._thread is None:  # synchronous mode: surface to caller
+                raise
+
+    def _process_inner(self, batch: list, deadline_flush: bool) -> None:
+        t_form = self._clock()
+        reqs: Sequence[_Request] = [p.item for p in batch]
+        queue_lat = np.array([t_form - p.t_enqueue for p in batch])
+        n = len(reqs)
+        bucket = self.policy.bucket_for(n)
+
+        X = np.stack([r.x for r in reqs])
+        if self._spec.sigma_in > 0:
+            X = X + self._rng.normal(0.0, self._spec.sigma_in, size=X.shape)
+        xbits = encode_inputs(self._lut, X)
+        xpad = self._layout.pad_inputs(xbits)
+        if bucket > n:
+            xpad = np.pad(xpad, ((0, bucket - n), (0, 0)))
+
+        fn = self.cache.get(bucket, self.engine)
+        out = fn(jnp.asarray(xpad))
+        jax.block_until_ready(out)
+        compute_s = self._clock() - t_form
+
+        preds, survivors, nsurv, active = (np.asarray(o)[:n] for o in out)
+        active = active.astype(np.int64)
+        energy = active.astype(np.float64) * self._hw.e_row + self._hw.e_mem
+
+        self.metrics_store.on_batch(
+            n, bucket,
+            deadline_flush=deadline_flush,
+            energy_j=float(energy.sum()),
+            active_evals=int(active.sum()),
+        )
+        self.metrics_store.queue.record_many(queue_lat)
+        self.metrics_store.compute.record(compute_s)
+        self.metrics_store.total.record_many(queue_lat + compute_s)
+
+        for i, req in enumerate(reqs):
+            req.future.set_result(
+                RequestResult(
+                    prediction=int(preds[i]),
+                    survivor=int(survivors[i]),
+                    n_survivors=int(nsurv[i]),
+                    active_evals=int(active[i]),
+                    energy_j=float(energy[i]),
+                    queue_s=float(queue_lat[i]),
+                    compute_s=compute_s,
+                    bucket=bucket,
+                    engine=self.engine,
+                )
+            )
+        with self._cond:
+            self._outstanding -= n
+            self._cond.notify_all()
+
+    # -- convenience & lifecycle -------------------------------------------
+    def serve(self, X: np.ndarray) -> list[RequestResult]:
+        """Submit every row of X, wait for completion, return results in
+        submission order."""
+        futs = self.submit_many(X)
+        self.drain()
+        return [f.result() for f in futs]
+
+    def metrics(self) -> dict:
+        """JSON-ready snapshot: serving counters/latency + compile cache +
+        modelled ReCAM hardware figures of merit."""
+        lay, hw = self._layout, self._hw
+        fm = f_max(lay.s, hw)
+        return self.metrics_store.snapshot(
+            engine=self.engine,
+            buckets=list(self.policy.buckets),
+            jit_cache=self.cache.stats(),
+            modelled_mdecs_seq=fm / lay.n_cwd / 1e6,
+            modelled_mdecs_pipe=fm / hw.pipeline_ii_cycles / 1e6,
+            layout={"rows": int(lay.cells.shape[0]),
+                    "width": int(lay.cells.shape[1]),
+                    "s": lay.s, "n_rwd": lay.n_rwd, "n_cwd": lay.n_cwd},
+        )
+
+    def close(self) -> None:
+        """Flush pending requests, stop the worker, reject new submits."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+        else:
+            while self.pump(force=True):
+                pass
+
+    def __enter__(self) -> "TCAMServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,139 @@
+"""Serving metrics: counters, latency percentiles, and the modelled-hardware
+figures of merit (nJ/decision, M decisions/s) the paper reports.
+
+``LatencyStats`` keeps a bounded ring of samples; percentiles are computed on
+demand.  ``ServeMetrics`` aggregates everything a load test needs into one
+``snapshot()`` dict (JSON-serializable — the serve benchmark dumps it as-is).
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+__all__ = ["LatencyStats", "ServeMetrics"]
+
+
+class LatencyStats:
+    """Bounded-reservoir latency recorder (seconds in, percentiles out)."""
+
+    def __init__(self, capacity: int = 16384) -> None:
+        self._buf = np.zeros(capacity, np.float64)
+        self._n = 0          # total recorded (may exceed capacity)
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._buf[self._n % self._buf.size] = seconds
+            self._n += 1
+
+    def record_many(self, seconds: np.ndarray) -> None:
+        for s in np.asarray(seconds, np.float64).ravel():
+            self.record(float(s))
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def _samples(self) -> np.ndarray:
+        with self._lock:
+            return self._buf[: min(self._n, self._buf.size)].copy()
+
+    def percentile(self, q: float) -> float:
+        s = self._samples()
+        return float(np.percentile(s, q)) if s.size else float("nan")
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    @property
+    def mean(self) -> float:
+        s = self._samples()
+        return float(s.mean()) if s.size else float("nan")
+
+    def summary_ms(self) -> dict[str, float]:
+        return {
+            "p50_ms": self.p50 * 1e3,
+            "p99_ms": self.p99 * 1e3,
+            "mean_ms": self.mean * 1e3,
+            "count": float(self.count),
+        }
+
+
+class ServeMetrics:
+    """Aggregated serving counters + latency stats.
+
+    Latency is split the way serving systems report it: *queue* (enqueue ->
+    batch formation) and *compute* (batch dispatch -> device results ready);
+    a request's end-to-end latency is queue + compute of its batch.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.requests_enqueued = 0
+        self.requests_served = 0
+        self.batches = 0
+        self.deadline_flushes = 0     # batches emitted by timeout, not by fill
+        self.padded_slots = 0         # Σ (bucket - actual batch size)
+        self.engine_fallbacks = 0     # illegal engine requests downgraded
+        self.energy_j = 0.0           # Σ modelled energy of served decisions
+        self.active_evals = 0         # Σ modelled active row-division evals
+        self.queue = LatencyStats()
+        self.compute = LatencyStats()
+        self.total = LatencyStats()
+
+    def on_enqueue(self, n: int = 1) -> None:
+        with self._lock:
+            self.requests_enqueued += n
+
+    def on_batch(
+        self,
+        n: int,
+        bucket: int,
+        *,
+        deadline_flush: bool,
+        energy_j: float,
+        active_evals: int,
+    ) -> None:
+        with self._lock:
+            self.requests_served += n
+            self.batches += 1
+            self.deadline_flushes += int(deadline_flush)
+            self.padded_slots += bucket - n
+            self.energy_j += energy_j
+            self.active_evals += active_evals
+
+    def on_fallback(self) -> None:
+        with self._lock:
+            self.engine_fallbacks += 1
+
+    def snapshot(self, **extra: float) -> dict:
+        """One JSON-ready dict: counters, latency summaries, and whatever
+        engine-level extras (hw model numbers, cache stats) are passed in."""
+        with self._lock:
+            served = self.requests_served
+            out = {
+                "requests_enqueued": self.requests_enqueued,
+                "requests_served": served,
+                "batches": self.batches,
+                "deadline_flushes": self.deadline_flushes,
+                "padded_slots": self.padded_slots,
+                "engine_fallbacks": self.engine_fallbacks,
+                "mean_batch_fill": (
+                    served / max(1, served + self.padded_slots)
+                ),
+                "modelled_nj_per_dec": (
+                    self.energy_j / served * 1e9 if served else float("nan")
+                ),
+                "active_evals": self.active_evals,
+            }
+        out["queue_latency"] = self.queue.summary_ms()
+        out["compute_latency"] = self.compute.summary_ms()
+        out["total_latency"] = self.total.summary_ms()
+        out.update(extra)
+        return out

@@ -1,0 +1,47 @@
+"""Optional-``hypothesis`` shim so the suite collects in a clean env.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  With hypothesis installed (see requirements-dev.txt)
+the real decorators are re-exported; without it the property tests collect as
+individual skips (reason: "hypothesis not installed") while every example
+based test in the same module still runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only in clean envs
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Fresh zero-arg function: @given normally supplies the params,
+            # so the wrapped signature must not leak into pytest's fixture
+            # resolution.
+            def skipper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction (st.integers(...), st.lists(...))
+        at collection time; the results are never executed."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -1,6 +1,6 @@
 """CART decision-tree training (from scratch)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import predict, train_tree, tree_paths
 

@@ -1,7 +1,7 @@
 """Ternary adaptive encoding (paper §II.A.4, Fig 1) + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (CELL_0, CELL_1, CELL_X, span_code, unary_code,
                         encode_table, encode_inputs)

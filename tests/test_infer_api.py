@@ -1,0 +1,165 @@
+"""Unified inference API: DT2CAM.infer backends, NonIdealSpec, engine
+selection edge cases, and the one-release deprecation shims."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import DT2CAM, IDEAL, NonIdealSpec, TernaryLUT
+from repro.core.lut import CELL_MM
+from repro.core.synth import synthesize
+from repro.dt import load_split
+from repro.kernels import select_engine, tcam_infer, tcam_match
+
+PAPER_DATASETS = ["iris", "cancer", "car"]
+
+
+def _fitted(name, s=64):
+    Xtr, ytr, Xte, yte = load_split(name)
+    return DT2CAM(s=s, max_depth=8).fit(Xtr, ytr), Xte, yte
+
+
+# --------------------------------------------------------------------------
+# backend parity
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dataset", PAPER_DATASETS)
+def test_jax_backend_bit_exact_vs_sim_ideal(dataset):
+    """Acceptance: backend='jax' matches backend='sim' predictions/energy
+    bit-exactly on ideal hardware across the paper datasets."""
+    m, Xte, yte = _fitted(dataset)
+    r_sim = m.infer(Xte)                      # default backend='sim'
+    r_jax = m.infer(Xte, backend="jax")
+    np.testing.assert_array_equal(r_jax.predictions, r_sim.predictions)
+    np.testing.assert_array_equal(r_jax.survivors, r_sim.survivors)
+    np.testing.assert_array_equal(r_jax.n_survivors, r_sim.n_survivors)
+    np.testing.assert_array_equal(r_jax.active_evals, r_sim.active_evals)
+    np.testing.assert_array_equal(r_jax.energy_per_dec, r_sim.energy_per_dec)
+    assert r_jax.latency_s == r_sim.latency_s
+    assert r_jax.throughput_seq == r_sim.throughput_seq
+    assert r_jax.throughput_pipe == r_sim.throughput_pipe
+
+
+def test_backends_match_under_nonidealities_with_same_seed():
+    """The SA-offset draw order matches and the kmax lowering is exact, so
+    even non-ideal inference agrees across backends when seeded alike."""
+    m, Xte, _ = _fitted("iris", s=16)
+    spec = NonIdealSpec(p_sa0=0.02, p_sa1=0.01, sa_sigma=0.03, sigma_in=0.04)
+    a = m.infer(Xte, nonideal=spec, rng=np.random.default_rng(7))
+    b = m.infer(Xte, backend="jax", nonideal=spec, rng=np.random.default_rng(7))
+    np.testing.assert_array_equal(a.predictions, b.predictions)
+    np.testing.assert_array_equal(a.energy_per_dec, b.energy_per_dec)
+
+
+def test_jax_backend_engine_passthrough_and_ref():
+    m, Xte, _ = _fitted("iris", s=16)
+    r_ref = m.infer(Xte, backend="jax", engine="ref")
+    r_mxu = m.infer(Xte, backend="jax", engine="mxu")
+    np.testing.assert_array_equal(r_ref.predictions, r_mxu.predictions)
+
+
+def test_selective_precharge_off_matches_sim():
+    m, Xte, _ = _fitted("iris", s=16)
+    r_sim = m.infer(Xte, selective_precharge=False)
+    r_jax = m.infer(Xte, backend="jax", selective_precharge=False)
+    np.testing.assert_array_equal(r_jax.active_evals, r_sim.active_evals)
+    np.testing.assert_array_equal(r_jax.energy_per_dec, r_sim.energy_per_dec)
+
+
+def test_unknown_backend_rejected():
+    m, Xte, _ = _fitted("iris", s=16)
+    with pytest.raises(ValueError, match="backend"):
+        m.infer(Xte, backend="tpu")
+
+
+# --------------------------------------------------------------------------
+# engine auto-selection edge cases
+# --------------------------------------------------------------------------
+def _layout(rng, rows=10, width=20, s=16, with_mm=False):
+    cells = rng.integers(0, 3, size=(rows, width)).astype(np.int8)
+    if with_mm:
+        cells[0, 0] = CELL_MM
+    lut = TernaryLUT(cells=cells,
+                     classes=rng.integers(0, 3, rows).astype(np.int32),
+                     n_classes=3,
+                     feat_offsets=np.array([0, width]),
+                     thresholds=[np.linspace(0, 1, width - 1)])
+    return synthesize(lut, s, seed=0)
+
+
+def test_auto_rejects_packed_when_s_not_mult_32():
+    lay = _layout(np.random.default_rng(0), s=16)
+    assert select_engine(lay.cells, 16, "auto") == "mxu"
+    with pytest.raises(ValueError, match="packed"):
+        select_engine(lay.cells, 16, "packed")
+
+
+def test_auto_rejects_packed_when_cell_mm_present():
+    lay = _layout(np.random.default_rng(1), s=32, with_mm=True)
+    assert select_engine(lay.cells, 32, "auto") == "mxu"
+    with pytest.raises(ValueError, match="CELL_MM|packed"):
+        select_engine(lay.cells, 32, "packed")
+
+
+def test_auto_picks_packed_when_legal():
+    lay = _layout(np.random.default_rng(2), s=32)
+    assert select_engine(lay.cells, 32, "auto") == "packed"
+
+
+def test_unknown_engine_rejected():
+    lay = _layout(np.random.default_rng(3), s=16)
+    with pytest.raises(ValueError, match="unknown engine"):
+        select_engine(lay.cells, 16, "warp")
+
+
+def test_kmax_minus_one_forces_mismatch():
+    """kmax = -1 means 'always mismatch' (the padded-row sentinel): the row
+    never survives and is only ever evaluated in division 0."""
+    rng = np.random.default_rng(4)
+    lay = _layout(rng, rows=12, width=40, s=16)   # n_cwd > 1
+    assert lay.n_cwd > 1
+    xb = rng.integers(0, 2, size=(9, 40)).astype(np.uint8)
+    xp = lay.pad_inputs(xb)
+    rows = lay.cells.shape[0]
+    km = np.full((rows, lay.n_cwd), -1, np.int32)
+    surv, ev = tcam_match(lay.cells, xp, 16, kmax=np.asarray(km), engine="mxu")
+    assert not np.asarray(surv).any()
+    np.testing.assert_array_equal(np.asarray(ev), np.ones((9, rows), np.int32))
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+def test_flat_nonideality_keywords_warn_and_still_work():
+    m, Xte, _ = _fitted("iris", s=16)
+    with pytest.warns(DeprecationWarning, match="NonIdealSpec"):
+        legacy = m.infer(Xte, sigma_in=0.02, rng=np.random.default_rng(3))
+    new = m.infer(Xte, nonideal=NonIdealSpec(sigma_in=0.02),
+                  rng=np.random.default_rng(3))
+    np.testing.assert_array_equal(legacy.predictions, new.predictions)
+
+
+def test_flat_keywords_and_spec_together_rejected():
+    m, Xte, _ = _fitted("iris", s=16)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="not both"):
+            m.infer(Xte, nonideal=IDEAL, p_sa0=0.1)
+
+
+def test_tcam_infer_tuple_unpacking_shim():
+    m, Xte, _ = _fitted("iris", s=16)
+    from repro.core.encode import encode_inputs
+    xb = encode_inputs(m.compiled.lut, Xte)
+    res = m.infer(Xte, backend="jax")
+    with pytest.warns(DeprecationWarning, match="tuple-unpacking"):
+        preds, surv, nsurv, act, en = tcam_infer(m.compiled.layout, xb)
+    np.testing.assert_array_equal(preds, res.predictions)
+    np.testing.assert_array_equal(en, res.energy_per_dec)
+
+
+def test_nonideal_spec_validation():
+    with pytest.raises(ValueError):
+        NonIdealSpec(p_sa0=-0.1)
+    with pytest.raises(ValueError):
+        NonIdealSpec(p_sa0=0.6, p_sa1=0.6)
+    assert IDEAL.is_ideal and not IDEAL.has_saf
+    assert NonIdealSpec(p_sa1=0.1).has_saf

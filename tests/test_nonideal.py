@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import DT2CAM, apply_saf, noisy_inputs
+from repro.core import DT2CAM, NonIdealSpec, apply_saf, noisy_inputs
 from repro.core.lut import CELL_0, CELL_1, CELL_MM, CELL_X
 from repro.dt import load_split
 
@@ -30,7 +30,7 @@ def test_saf_accuracy_degrades_with_rate():
     m = DT2CAM(s=32, max_depth=8).fit(Xtr, ytr)
     base = m.infer(Xte).accuracy(yte)
     rng = np.random.default_rng(2)
-    accs = [np.mean([m.infer(Xte, p_sa0=p, p_sa1=p,
+    accs = [np.mean([m.infer(Xte, nonideal=NonIdealSpec(p_sa0=p, p_sa1=p),
                              rng=np.random.default_rng(100 + i)).accuracy(yte)
                      for i in range(3)]) for p in (0.001, 0.05)]
     assert accs[0] >= accs[1] - 0.02          # higher defect rate hurts more
@@ -41,7 +41,7 @@ def test_input_noise_changes_encoding_not_catastrophically():
     Xtr, ytr, Xte, yte = load_split("diabetes")
     m = DT2CAM(s=64, max_depth=8).fit(Xtr, ytr)
     base = m.infer(Xte).accuracy(yte)
-    small = m.infer(Xte, sigma_in=0.001).accuracy(yte)
+    small = m.infer(Xte, nonideal=NonIdealSpec(sigma_in=0.001)).accuracy(yte)
     assert abs(base - small) < 0.1
 
 
@@ -49,7 +49,7 @@ def test_sa_variability_monotone_in_sigma():
     Xtr, ytr, Xte, yte = load_split("cancer")
     m = DT2CAM(s=32, max_depth=8).fit(Xtr, ytr)
     base = m.infer(Xte).accuracy(yte)
-    hi = np.mean([m.infer(Xte, sa_sigma=0.1,
+    hi = np.mean([m.infer(Xte, nonideal=NonIdealSpec(sa_sigma=0.1),
                           rng=np.random.default_rng(i)).accuracy(yte)
                   for i in range(3)])
     assert hi <= base + 1e-9

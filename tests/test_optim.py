@@ -1,6 +1,6 @@
 """Optimizer + compression."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

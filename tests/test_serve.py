@@ -1,0 +1,204 @@
+"""Serving engine: adaptive batching, bucket-bounded jit compiles, metrics,
+engine fallback, and the >=1k-request smoke test from the PR acceptance
+criteria."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DT2CAM, NonIdealSpec
+from repro.dt import load_split
+from repro.serve import (AdaptiveBatcher, BucketPolicy, LatencyStats,
+                         ServeConfig, TCAMServer)
+
+
+@pytest.fixture(scope="module")
+def iris_model():
+    Xtr, ytr, Xte, yte = load_split("iris")
+    return DT2CAM(s=16, max_depth=5).fit(Xtr, ytr), Xte, yte
+
+
+# --------------------------------------------------------------------------
+# pure-logic units
+# --------------------------------------------------------------------------
+def test_bucket_policy_ladder_and_lookup():
+    p = BucketPolicy(max_batch=100, min_bucket=8)
+    assert p.buckets == (8, 16, 32, 64, 100)
+    assert p.bucket_for(1) == 8
+    assert p.bucket_for(8) == 8
+    assert p.bucket_for(9) == 16
+    assert p.bucket_for(65) == 100
+    assert p.bucket_for(100) == 100
+    with pytest.raises(ValueError):
+        p.bucket_for(101)
+    with pytest.raises(ValueError):
+        p.bucket_for(0)
+    with pytest.raises(ValueError):
+        BucketPolicy(max_batch=4, min_bucket=8)
+
+
+def test_adaptive_batcher_flush_rules():
+    b = AdaptiveBatcher(max_batch=4, max_delay_s=1.0)
+    assert not b.ready(0.0) and b.deadline() is None
+    b.add("a", 0.0)
+    assert b.deadline() == 1.0
+    assert not b.ready(0.5)          # neither full nor expired
+    assert b.ready(1.0)              # oldest hit its deadline
+    for x in "bcd":
+        b.add(x, 0.1)
+    assert b.ready(0.2)              # full
+    batch = b.pop_batch()
+    assert [p.item for p in batch] == list("abcd")   # FIFO order
+    assert len(b) == 0 and not b.ready(2.0)
+
+
+def test_latency_stats_percentiles():
+    ls = LatencyStats(capacity=100)
+    for v in np.linspace(0.001, 0.1, 100):
+        ls.record(float(v))
+    assert ls.count == 100
+    assert ls.p50 == pytest.approx(0.0505, rel=0.05)
+    assert ls.p99 > ls.p50
+    assert np.isnan(LatencyStats().p50)
+
+
+# --------------------------------------------------------------------------
+# acceptance smoke: >= 1k requests, bounded compiles
+# --------------------------------------------------------------------------
+def test_smoke_1k_requests_bucket_batching(iris_model):
+    m, Xte, yte = iris_model
+    n_requests = 1024
+    cfg = ServeConfig(max_batch=64, min_bucket=8, background=False)
+    srv = TCAMServer(m.compiled, config=cfg)
+
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(Xte), size=n_requests)
+    futs = []
+    sent = 0
+    while sent < n_requests:                     # bursty arrivals
+        burst = int(rng.integers(1, 2 * cfg.max_batch))
+        take = idx[sent : sent + burst]
+        futs += srv.submit_many(Xte[take])
+        sent += len(take)
+        while srv.pump(force=True):
+            pass
+    srv.drain()
+
+    res = [f.result() for f in futs]
+    assert len(res) == n_requests
+    stats = srv.metrics()
+    assert stats["requests_served"] == n_requests
+
+    # jit cache misses bounded by buckets x engines (acceptance criterion)
+    n_buckets = len(srv.policy.buckets)
+    assert stats["jit_cache"]["misses"] <= n_buckets * 1
+    assert stats["jit_cache"]["hits"] == stats["batches"] - stats["jit_cache"]["misses"]
+    # multiple buckets actually exercised by the bursty arrivals
+    assert len({r.bucket for r in res}) > 1
+
+    # served decisions identical to the one-shot jax backend
+    preds = np.array([r.prediction for r in res])
+    ref = m.infer(Xte[idx], backend="jax")
+    np.testing.assert_array_equal(preds, ref.predictions)
+    np.testing.assert_array_equal(
+        np.array([r.energy_j for r in res]), ref.energy_per_dec
+    )
+    assert stats["total_latency"]["p99_ms"] >= stats["total_latency"]["p50_ms"]
+    srv.close()
+
+
+def test_background_worker_futures_and_deadline_flush(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=512, min_bucket=4, max_delay_s=0.01)
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        futs = srv.submit_many(Xte[:3])          # far below max_batch
+        res = [f.result(timeout=30) for f in futs]   # deadline must flush
+        assert all(r.bucket == 4 for r in res)
+        stats = srv.metrics()
+        assert stats["deadline_flushes"] >= 1
+        assert stats["requests_served"] == 3
+
+
+def test_warmup_precompiles_all_buckets(iris_model):
+    m, _, _ = iris_model
+    cfg = ServeConfig(max_batch=32, min_bucket=8, background=False)
+    srv = TCAMServer(m.compiled, config=cfg)
+    assert srv.warmup() == len(srv.policy.buckets)
+    assert srv.warmup() == 0                     # second call: all hits
+    srv.close()
+
+
+def test_engine_fallback_when_packed_illegal(iris_model):
+    m, Xte, _ = iris_model                       # s=16: packed illegal
+    cfg = ServeConfig(engine="packed", background=False, max_batch=8)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        srv = TCAMServer(m.compiled, config=cfg)
+    assert srv.engine == "mxu"
+    res = srv.serve(Xte[:5])
+    assert len(res) == 5 and all(r.engine == "mxu" for r in res)
+    assert srv.metrics()["engine_fallbacks"] == 1
+    srv.close()
+
+
+def test_packed_engine_served_when_legal():
+    Xtr, ytr, Xte, _ = load_split("iris")
+    m = DT2CAM(s=32, max_depth=5).fit(Xtr, ytr)
+    cfg = ServeConfig(background=False, max_batch=8)
+    srv = TCAMServer(m.compiled, config=cfg)
+    assert srv.engine == "packed"
+    res = srv.serve(Xte[:8])
+    ref = m.infer(Xte[:8], backend="jax", engine="packed")
+    np.testing.assert_array_equal(
+        np.array([r.prediction for r in res]), ref.predictions
+    )
+    srv.close()
+
+
+def test_nonideal_serving_runs_and_counts(iris_model):
+    m, Xte, yte = iris_model
+    cfg = ServeConfig(background=False, max_batch=16)
+    srv = TCAMServer(
+        m.compiled, config=cfg,
+        nonideal=NonIdealSpec(p_sa0=0.01, sa_sigma=0.02, sigma_in=0.02),
+        rng=np.random.default_rng(5),
+    )
+    res = srv.serve(np.tile(Xte, (3, 1)))
+    assert len(res) == 3 * len(Xte)
+    acc = (np.array([r.prediction for r in res]) == np.tile(yte, 3)).mean()
+    assert acc > 0.5                             # degraded but functional
+    srv.close()
+
+
+def test_submit_after_close_rejected(iris_model):
+    m, Xte, _ = iris_model
+    srv = TCAMServer(m.compiled, config=ServeConfig(background=False))
+    srv.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(Xte[0])
+
+
+def test_concurrent_submitters_background(iris_model):
+    """Several client threads pushing into one server: everything resolves
+    and counts line up."""
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=32, min_bucket=8, max_delay_s=0.005)
+    results = []
+    lock = threading.Lock()
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        def client(seed):
+            rng = np.random.default_rng(seed)
+            futs = [srv.submit(Xte[rng.integers(0, len(Xte))])
+                    for _ in range(50)]
+            out = [f.result(timeout=60) for f in futs]
+            with lock:
+                results.extend(out)
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.metrics()
+    assert len(results) == 200
+    assert stats["requests_served"] == 200
+    assert stats["jit_cache"]["misses"] <= len(srv.policy.buckets)
