@@ -20,7 +20,15 @@ from .energy import (
     t_opt,
 )
 from .lut import CELL_0, CELL_1, CELL_MM, CELL_X, TernaryLUT, bitplanes
-from .nonideal import IDEAL, NonIdealSpec, apply_saf, noisy_inputs
+from .nonideal import (
+    IDEAL,
+    NonIdealSpec,
+    SAFMask,
+    apply_saf,
+    apply_saf_mask,
+    noisy_inputs,
+    sample_saf,
+)
 from .reduce import CMP_BETWEEN, CMP_GT, CMP_LE, CMP_NONE, RuleTable, reduce_tree
 from .simulate import SimResult, mismatch_counts, simulate
 from .synth import TCAMLayout, synthesize
@@ -32,7 +40,8 @@ __all__ = [
     "DEFAULT_HW", "HardwareParams", "choose_tile_size", "dynamic_range",
     "f_max", "max_cells_per_row", "t_cwd", "t_opt",
     "CELL_0", "CELL_1", "CELL_MM", "CELL_X", "TernaryLUT", "bitplanes",
-    "IDEAL", "NonIdealSpec", "apply_saf", "noisy_inputs",
+    "IDEAL", "NonIdealSpec", "SAFMask", "apply_saf", "apply_saf_mask",
+    "noisy_inputs", "sample_saf",
     "CMP_BETWEEN", "CMP_GT", "CMP_LE", "CMP_NONE", "RuleTable", "reduce_tree",
     "SimResult", "mismatch_counts", "simulate",
     "TCAMLayout", "synthesize",

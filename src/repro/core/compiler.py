@@ -72,11 +72,11 @@ class CompiledDT:
 
 def compile_tree(
     tree: DecisionTree, s: int = 128, *, nan_full_dontcare: bool = True,
-    seed: int = 0,
+    seed: int = 0, spare_rows: int = 0,
 ) -> CompiledDT:
     table = reduce_tree(tree)
     lut = encode_table(table, nan_full_dontcare=nan_full_dontcare)
-    layout = synthesize(lut, s, seed=seed)
+    layout = synthesize(lut, s, seed=seed, spare_rows=spare_rows)
     return CompiledDT(tree=tree, table=table, lut=lut, layout=layout)
 
 
@@ -96,19 +96,23 @@ class DT2CAM:
         min_samples_leaf: int = 1,
         hw: HardwareParams = DEFAULT_HW,
         seed: int = 0,
+        spare_rows: int = 0,
     ) -> None:
         self.s = s
         self.max_depth = max_depth
         self.min_samples_leaf = min_samples_leaf
         self.hw = hw
         self.seed = seed
+        self.spare_rows = spare_rows
         self.compiled: Optional[CompiledDT] = None
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "DT2CAM":
         tree = train_tree(
             X, y, max_depth=self.max_depth, min_samples_leaf=self.min_samples_leaf
         )
-        self.compiled = compile_tree(tree, self.s, seed=self.seed)
+        self.compiled = compile_tree(
+            tree, self.s, seed=self.seed, spare_rows=self.spare_rows
+        )
         return self
 
     # -- golden reference (paper: 'accuracy obtained in Python') --

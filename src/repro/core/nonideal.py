@@ -9,17 +9,30 @@ Three mechanisms:
     V_ref of individual sense amplifiers).
   * Input encoding noise: N(0, σ_in) added to normalized features before
     encoding.
+
+Stuck-at faults are a *physical, persistent* property of a chip: the same
+elements stay stuck no matter what is later written to the array.  The fault
+state is therefore factored into an explicit ``SAFMask`` (sampled once per
+chip with ``sample_saf``) that can be re-applied to any cell contents with
+``apply_saf_mask`` — this is what makes spare-row repair honest: writing new
+content to a row goes *through* the row's stuck elements
+(``repro.reliability.repair``).  ``apply_saf`` remains the one-shot
+convenience wrapper (sample + apply).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from .lut import CELL_0, CELL_1, CELL_MM, CELL_X
 
-__all__ = ["NonIdealSpec", "IDEAL", "apply_saf", "noisy_inputs", "CELL_TO_PAIR"]
+__all__ = [
+    "NonIdealSpec", "IDEAL", "SAFMask", "sample_saf", "apply_saf_mask",
+    "apply_saf", "noisy_inputs", "CELL_TO_PAIR",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +85,100 @@ for _c, (_a, _b) in CELL_TO_PAIR.items():
     _PAIR_TO_CELL[int(_a), int(_b)] = _c
 
 
+@dataclasses.dataclass(frozen=True)
+class SAFMask:
+    """Persistent per-element stuck-fault state of one physical chip.
+
+    Four boolean arrays of the cell-grid shape; ``sa0_*`` marks elements
+    stuck at HRS, ``sa1_*`` elements stuck at LRS (disjoint per element).
+    """
+
+    sa0_r1: np.ndarray
+    sa1_r1: np.ndarray
+    sa0_r2: np.ndarray
+    sa1_r2: np.ndarray
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.sa0_r1.shape
+
+    @property
+    def any_fault(self) -> np.ndarray:
+        """Boolean grid: cell has at least one stuck element."""
+        return self.sa0_r1 | self.sa1_r1 | self.sa0_r2 | self.sa1_r2
+
+    @property
+    def n_stuck_elements(self) -> int:
+        return int(self.sa0_r1.sum() + self.sa1_r1.sum()
+                   + self.sa0_r2.sum() + self.sa1_r2.sum())
+
+
+def _stuck_draw(
+    shape: tuple[int, ...], p_sa0: float, p_sa1: float,
+    rng: np.random.Generator,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-element stuck state: two *independent* defect draws; when both
+    fire, a fair coin picks the winner (two independent physical defects —
+    whichever dominates the element is a toss-up)."""
+    fire0 = rng.random(shape) < p_sa0
+    fire1 = rng.random(shape) < p_sa1
+    both = fire0 & fire1
+    coin = rng.random(shape) < 0.5
+    sa0 = (fire0 & ~fire1) | (both & coin)
+    sa1 = (fire1 & ~fire0) | (both & ~coin)
+    return sa0, sa1
+
+
+def sample_saf(
+    shape: tuple[int, ...],
+    p_sa0: float,
+    p_sa1: float,
+    rng: np.random.Generator,
+) -> SAFMask:
+    """Sample one chip's persistent stuck-at fault mask.
+
+    Each resistive element independently becomes stuck-at-HRS with prob p_sa0
+    and stuck-at-LRS with prob p_sa1; if both independent defects fire on the
+    same element, a 50/50 draw resolves which one dominates."""
+    if p_sa0 + p_sa1 > 1.0:
+        raise ValueError("p_sa0 + p_sa1 must be <= 1")
+    sa0_r1, sa1_r1 = _stuck_draw(shape, p_sa0, p_sa1, rng)
+    sa0_r2, sa1_r2 = _stuck_draw(shape, p_sa0, p_sa1, rng)
+    return SAFMask(sa0_r1=sa0_r1, sa1_r1=sa1_r1, sa0_r2=sa0_r2, sa1_r2=sa1_r2)
+
+
+def apply_saf_mask(cells: np.ndarray, mask: SAFMask) -> np.ndarray:
+    """Project intended cell contents through a chip's stuck elements.
+
+    Models a physical array write: programming pulses move every *healthy*
+    element to its target state, while stuck elements keep their stuck value.
+    Idempotent — re-applying the same mask is a no-op."""
+    cells = np.asarray(cells)
+    if mask.shape != cells.shape:
+        raise ValueError(
+            f"mask shape {mask.shape} != cells shape {cells.shape}"
+        )
+    r1_lrs = np.isin(cells, (CELL_1, CELL_MM))
+    r2_lrs = np.isin(cells, (CELL_0, CELL_MM))
+    r1_lrs = (r1_lrs & ~mask.sa0_r1) | mask.sa1_r1
+    r2_lrs = (r2_lrs & ~mask.sa0_r2) | mask.sa1_r2
+    return _PAIR_TO_CELL[r1_lrs.astype(int), r2_lrs.astype(int)]
+
+
+def _require_rng(rng: Optional[np.random.Generator],
+                 fn_name: str) -> np.random.Generator:
+    if rng is not None:
+        return rng
+    warnings.warn(
+        f"{fn_name}() without an explicit rng is deprecated — the silent "
+        "default_rng(0) makes every fault sweep draw the same chip; pass a "
+        "np.random.Generator (this shim will be removed next release)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return np.random.default_rng(0)
+
+
 def apply_saf(
     cells: np.ndarray,
     p_sa0: float,
@@ -80,30 +187,19 @@ def apply_saf(
 ) -> np.ndarray:
     """Inject stuck-at faults into a cell-state array (any shape).
 
-    Each resistive element independently becomes stuck-at-HRS with prob p_sa0
-    and stuck-at-LRS with prob p_sa1 (mutually exclusive draws; if both fire
-    the draw is resolved 50/50, matching independent physical defects)."""
-    rng = rng or np.random.default_rng(0)
+    One-shot convenience: ``apply_saf_mask(cells, sample_saf(...))``.  Keep
+    the ``SAFMask`` instead when the chip needs to be written again later
+    (spare-row repair).
+
+    .. deprecated:: 0.7
+       Calling without an explicit ``rng`` warns and falls back to
+       ``default_rng(0)``; the fallback will be removed next release.
+    """
     cells = np.asarray(cells)
-    r1_lrs = np.isin(cells, (CELL_1, CELL_MM))
-    r2_lrs = np.isin(cells, (CELL_0, CELL_MM))
-
-    def stick(is_lrs: np.ndarray) -> np.ndarray:
-        u = rng.random(cells.shape)
-        stuck0 = u < p_sa0
-        stuck1 = (u >= p_sa0) & (u < p_sa0 + p_sa1)
-        # tie-break region when p_sa0 + p_sa1 > 1 is impossible for paper's
-        # ranges (max 5% + 5%); assert to be safe.
-        out = is_lrs.copy()
-        out[stuck0] = False  # stuck at HRS
-        out[stuck1] = True   # stuck at LRS
-        return out
-
-    if p_sa0 + p_sa1 > 1.0:
-        raise ValueError("p_sa0 + p_sa1 must be <= 1")
-    new_r1 = stick(r1_lrs)
-    new_r2 = stick(r2_lrs)
-    return _PAIR_TO_CELL[new_r1.astype(int), new_r2.astype(int)]
+    if p_sa0 == 0.0 and p_sa1 == 0.0:
+        return cells.copy()
+    rng = _require_rng(rng, "apply_saf")
+    return apply_saf_mask(cells, sample_saf(cells.shape, p_sa0, p_sa1, rng))
 
 
 def noisy_inputs(
@@ -111,9 +207,14 @@ def noisy_inputs(
     sigma_in: float,
     rng: Optional[np.random.Generator] = None,
 ) -> np.ndarray:
-    """Add input-encoding noise to (normalized) features (paper: σ_in sweep)."""
+    """Add input-encoding noise to (normalized) features (paper: σ_in sweep).
+
+    .. deprecated:: 0.7
+       Calling without an explicit ``rng`` warns and falls back to
+       ``default_rng(0)``; the fallback will be removed next release.
+    """
     if sigma_in <= 0:
         return np.asarray(X, dtype=np.float64)
-    rng = rng or np.random.default_rng(0)
+    rng = _require_rng(rng, "noisy_inputs")
     X = np.asarray(X, dtype=np.float64)
     return X + rng.normal(0.0, sigma_in, size=X.shape)

@@ -46,6 +46,16 @@ class TCAMLayout:
         return self.n_rwd * self.n_cwd
 
     @property
+    def n_spares(self) -> int:
+        """Physical rows beyond the LUT (rogue rows) — the spare-row pool
+        available to ``repro.reliability.repair``."""
+        return int(self.cells.shape[0]) - self.n_rows
+
+    @property
+    def spare_row_indices(self) -> np.ndarray:
+        return np.arange(self.n_rows, self.cells.shape[0])
+
+    @property
     def n_cells(self) -> int:
         """Total TCAM cells across tiles (area / energy accounting)."""
         return self.n_tiles * self.s * self.s
@@ -73,10 +83,20 @@ class TCAMLayout:
         return tcam + cls
 
 
-def synthesize(lut: TernaryLUT, s: int, *, seed: int = 0) -> TCAMLayout:
-    """Map the encoded LUT into S×S tiles with decoder column + rogue rows."""
+def synthesize(
+    lut: TernaryLUT, s: int, *, seed: int = 0, spare_rows: int = 0
+) -> TCAMLayout:
+    """Map the encoded LUT into S×S tiles with decoder column + rogue rows.
+
+    ``spare_rows`` guarantees at least that many rogue rows beyond the LUT
+    (adding row-wise tiles as needed) so the reliability layer has a spare
+    pool to remap defective rows onto; the natural tile padding already
+    provides ``n_rwd·s - rows`` spares for free.
+    """
+    if spare_rows < 0:
+        raise ValueError("spare_rows must be >= 0")
     rows, width = lut.n_rows, lut.width
-    n_rwd = max(1, math.ceil(rows / s))
+    n_rwd = max(1, math.ceil((rows + spare_rows) / s))
     n_cwd = max(1, math.ceil((width + 1) / s))
     total_rows, total_cols = n_rwd * s, n_cwd * s
 

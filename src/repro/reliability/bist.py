@@ -1,0 +1,187 @@
+"""March-style built-in self-test (BIST) for TCAM arrays.
+
+A deployed chip cannot be read cell-by-cell; its only observable is the
+match/mismatch response to search words.  The BIST therefore probes each
+physical row with a small synthesized test set and compares the *observed*
+response against the *intended* response (what the row was programmed to
+hold), in the spirit of march tests for CAMs:
+
+  M0 (stored-word element): the row's own matching word — every intended
+      literal satisfied.  A healthy row matches; a row with any restrictive
+      fault (``X -> 0/1`` flip, ``{LRS,LRS}`` always-mismatch cell, decoder
+      corruption) responds differently from intent.
+  M1 (walking-bit element): flip one body bit of M0 at a time.  A healthy
+      row mismatches exactly at its literal positions; a permissive fault
+      (``0/1 -> X``) matches where it should not, a flipped literal
+      mismatches where it should not.
+  M2/M3 (readback elements): the same two probe families synthesized from
+      the *observed* cell state (2T2R cells are resistive memory with a read
+      port — readback is how a controller verifies writes).  Intent-derived
+      probes alone can miss a row whose intent is dead but whose faults
+      brought it alive with several 1-literals: no single walking bit
+      satisfies all of them at once.  The actual row's own characteristic
+      word does, exposing the rogue.
+
+The decoder bit (column 0) is held at the query value '0' throughout —
+probes only cover inputs the chip can actually see, so rows whose faults are
+behaviorally invisible to real queries are (correctly) not flagged.
+
+``row_signatures`` / ``behavior_changed_rows`` give the analytic ground
+truth — two rows respond identically to every reachable query iff their
+(dead?, 0-literal set, 1-literal set) signatures agree — used for coverage
+accounting in tests and the chaos harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.lut import CELL_0, CELL_1, CELL_MM, CELL_X
+from ..core.synth import TCAMLayout
+
+__all__ = [
+    "BistReport", "march_probes", "row_match", "row_signatures",
+    "behavior_changed_rows", "run_bist",
+]
+
+
+def row_match(cells: np.ndarray, words: np.ndarray, used: int) -> np.ndarray:
+    """Evaluate search words against rows of cells; (R, P) or (P,) booleans.
+
+    A row survives iff every unmasked cell (columns ``[0, used)``) matches:
+    CELL_X matches both bits, CELL_0/1 match their bit, CELL_MM matches
+    neither.  Columns beyond ``used`` are masked (OFF-OFF) and ignored —
+    identical to the oracle's final survive with kmax=0.
+    """
+    cells = np.atleast_2d(np.asarray(cells))[:, :used]       # (R, used)
+    words = np.atleast_2d(np.asarray(words))[:, :used]       # (P, used)
+    c = cells[:, None, :]                                    # (R, 1, used)
+    w = words[None, :, :]                                    # (1, P, used)
+    ok = ((c == CELL_X) | ((c == CELL_0) & (w == 0))
+          | ((c == CELL_1) & (w == 1)))
+    return ok.all(axis=2)                                    # (R, P)
+
+
+def row_signatures(
+    cells: np.ndarray, used: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Analytic behavior signature of each row over *reachable* queries
+    (decoder bit fixed at 0, body bits free).
+
+    Returns ``(dead, zeros, ones)``: ``dead`` (R,) — the row matches no
+    reachable query; ``zeros``/``ones`` (R, used-1) — body positions whose
+    input bit must be 0 / must be 1.  Two alive rows behave identically iff
+    their literal sets agree; literal masks of dead rows are meaningless.
+    """
+    cells = np.atleast_2d(np.asarray(cells))
+    dec = cells[:, 0]
+    body = cells[:, 1:used]
+    dead = np.isin(dec, (CELL_1, CELL_MM)) | (body == CELL_MM).any(axis=1)
+    return dead, body == CELL_0, body == CELL_1
+
+
+def behavior_changed_rows(
+    intent_cells: np.ndarray, actual_cells: np.ndarray, used: int
+) -> np.ndarray:
+    """(R,) bool — rows whose faults change the match response to at least
+    one reachable query (the ground truth a BIST run is scored against)."""
+    di, zi, oi = row_signatures(intent_cells, used)
+    da, za, oa = row_signatures(actual_cells, used)
+    alive_diff = (
+        ~di & ~da & ((zi != za).any(axis=1) | (oi != oa).any(axis=1))
+    )
+    return (di != da) | alive_diff
+
+
+def march_probes(intent_row: np.ndarray, used: int) -> np.ndarray:
+    """Synthesize the M0 + M1 probe set for one row's intended content.
+
+    (used, W) uint8: row 0 is the stored word (decoder 0, CELL_1 -> 1, else
+    0), rows 1.. walk a single flipped bit across the body columns.
+    """
+    intent_row = np.asarray(intent_row)
+    w = intent_row.shape[0]
+    base = np.zeros(w, np.uint8)
+    base[:used] = (intent_row[:used] == CELL_1).astype(np.uint8)
+    base[0] = 0                                   # decoder query bit is fixed
+    probes = np.tile(base, (used, 1))
+    flip = np.arange(1, used)                     # M1: walk the body bits
+    probes[1 + np.arange(used - 1), flip] ^= 1
+    return probes
+
+
+@dataclasses.dataclass
+class BistReport:
+    """Per-row defect map from one self-test pass."""
+
+    detected: np.ndarray          # (R,) bool — observed response != intent
+    probes_run: int
+    n_rows: int                   # LUT (non-spare) rows in the array
+
+    @property
+    def defective_rows(self) -> np.ndarray:
+        return np.flatnonzero(self.detected)
+
+    @property
+    def n_defective(self) -> int:
+        return int(self.detected.sum())
+
+    def coverage(self, changed: np.ndarray) -> float:
+        """Fraction of ground-truth behavior-changing rows detected
+        (1.0 when nothing changed)."""
+        changed = np.asarray(changed, bool)
+        if not changed.any():
+            return 1.0
+        return float((self.detected & changed).sum() / changed.sum())
+
+    def summary(self) -> dict:
+        return {
+            "rows": int(self.detected.size),
+            "lut_rows": self.n_rows,
+            "defective": self.n_defective,
+            "defective_lut_rows": int(self.detected[: self.n_rows].sum()),
+            "probes_run": self.probes_run,
+        }
+
+
+def run_bist(
+    actual_cells: np.ndarray,
+    intent_cells: np.ndarray,
+    *,
+    used: int,
+    n_rows: int,
+) -> BistReport:
+    """Self-test every physical row of a chip against its intended content.
+
+    ``actual_cells`` is the faulty array as it responds on-chip,
+    ``intent_cells`` the content the controller programmed (the ideal layout
+    initially; updated by repair).  ``used = 1 + lut_width`` unmasked
+    columns; ``n_rows`` LUT rows (the rest are rogue/spare rows whose intent
+    is to never match).
+    """
+    actual_cells = np.asarray(actual_cells)
+    intent_cells = np.asarray(intent_cells)
+    if actual_cells.shape != intent_cells.shape:
+        raise ValueError("actual/intent cell grids must have the same shape")
+    r = actual_cells.shape[0]
+    detected = np.zeros(r, bool)
+    probes_run = 0
+    for i in range(r):
+        probes = march_probes(intent_cells[i], used)         # M0 + M1
+        readback = march_probes(actual_cells[i], used)       # M2 + M3
+        if (readback != probes).any():
+            probes = np.concatenate([probes, readback])
+        probes_run += probes.shape[0]
+        expect = row_match(intent_cells[i], probes, used)[0]
+        got = row_match(actual_cells[i], probes, used)[0]
+        detected[i] = bool((expect != got).any())
+    return BistReport(detected=detected, probes_run=probes_run, n_rows=n_rows)
+
+
+def bist_layout(layout: TCAMLayout, intent_cells: np.ndarray) -> BistReport:
+    """Convenience wrapper: self-test a layout's cells against intent."""
+    return run_bist(
+        layout.cells, intent_cells,
+        used=1 + layout.width, n_rows=layout.n_rows,
+    )

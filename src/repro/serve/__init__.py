@@ -10,19 +10,27 @@ kernels, reachable from one line:
     ...     preds = [r.prediction for r in server.serve(X)]
     ...     stats = server.metrics()
 
-  engine.py   — TCAMServer: queue, worker, futures, engine fallback, metrics
+  engine.py   — TCAMServer: queue, worker, futures, engine fallback, metrics,
+                BIST/repair/canary wiring + circuit breaker
   batching.py — BucketPolicy (padded batch shapes) + AdaptiveBatcher
                 (flush on max-batch or deadline)
   cache.py    — CompileCache: one jit compile per (bucket, engine, layout)
   metrics.py  — counters + p50/p99 latency + modelled nJ/dec, M dec/s
+  errors.py   — typed serving failures (Rejected / DeadlineExceeded /
+                ComputeFailed); every Future resolves with one or a result
+
+Fault tolerance across chips (majority voting) lives in
+``repro.reliability.ReplicatedServer``.
 """
 from .batching import AdaptiveBatcher, BucketPolicy
 from .cache import CompileCache
 from .engine import RequestResult, ServeConfig, TCAMServer
+from .errors import ComputeFailed, DeadlineExceeded, Rejected, ServingError
 from .metrics import LatencyStats, ServeMetrics
 
 __all__ = [
     "AdaptiveBatcher", "BucketPolicy", "CompileCache",
     "RequestResult", "ServeConfig", "TCAMServer",
     "LatencyStats", "ServeMetrics",
+    "ServingError", "Rejected", "DeadlineExceeded", "ComputeFailed",
 ]

@@ -11,12 +11,23 @@ engine on the Pallas kernels:
 * engine selection ('auto'/'mxu'/'packed'/'ref') with automatic fallback to
   'mxu' when the packed engine is illegal for the layout;
 * metrics — requests served, p50/p99 queue/compute/total latency, compile
-  cache hits/misses, modelled nJ/decision and M decisions/s (``metrics.py``).
+  cache hits/misses, modelled nJ/dec and M dec/s (``metrics.py``).
 
 Chip-static non-idealities (stuck-at faults, SA V_ref offsets) are sampled
 once at server construction — that is what a physical deployment looks like:
 one faulty chip serving many queries.  Per-query input noise (σ_in) is drawn
 per batch.
+
+Reliability layer (``repro.reliability``): the stuck-fault state is kept as
+a persistent per-element ``SAFMask``, so the server can *self-test*
+(march-style BIST), *repair* (remap defective rows onto write-verified spare
+rows), and *canary* itself (golden vectors replayed through the compute
+path).  Serving protections: bounded queue with load shedding
+(``Rejected``), per-request queueing deadlines (``DeadlineExceeded``),
+retry-with-backoff for transient compute failures (``ComputeFailed`` after
+the budget), and a periodic canary that trips a circuit breaker driving the
+degradation ladder degraded -> repair -> re-vote -> engine fallback to
+'ref'.  Every submitted Future resolves — with a result or a typed error.
 
 Run ``background=True`` (default) for a worker thread + Future-based
 completion, or ``background=False`` for deterministic single-threaded tests
@@ -39,10 +50,21 @@ import numpy as np
 from ..core.compiler import CompiledDT
 from ..core.encode import encode_inputs
 from ..core.energy import DEFAULT_HW, HardwareParams, f_max
-from ..core.nonideal import IDEAL, NonIdealSpec, apply_saf
+from ..core.lut import CELL_1, CELL_X
+from ..core.nonideal import (
+    IDEAL,
+    NonIdealSpec,
+    SAFMask,
+    apply_saf_mask,
+    sample_saf,
+)
 from ..kernels.ops import _finalize, sa_kmax, select_engine, tcam_match
+from ..reliability.bist import BistReport, run_bist
+from ..reliability.canary import CanaryProbe, CircuitBreaker, make_canary
+from ..reliability.repair import RepairReport, repair_layout
 from .batching import AdaptiveBatcher, BucketPolicy
 from .cache import CompileCache
+from .errors import ComputeFailed, DeadlineExceeded, Rejected
 from .metrics import ServeMetrics
 
 __all__ = ["ServeConfig", "RequestResult", "TCAMServer"]
@@ -58,6 +80,17 @@ class ServeConfig:
     engine: str = "auto"          # 'auto' | 'mxu' | 'packed' | 'ref'
     interpret: Optional[bool] = None   # Pallas interpret mode (None = auto)
     background: bool = True       # worker thread vs explicit pump()/drain()
+    # -- serving protections ----------------------------------------------
+    max_queue: Optional[int] = None    # admission control: shed when this
+                                       # many requests are already queued
+    request_timeout_s: Optional[float] = None  # per-request queue deadline
+    max_retries: int = 0          # transient compute failure retry budget
+    retry_backoff_s: float = 0.01      # first backoff; doubles per retry
+    # -- chip-health canary / circuit breaker ------------------------------
+    canary_every_batches: int = 0      # 0 disables the periodic canary
+    canary_size: int = 32              # golden vectors per canary run
+    canary_threshold: float = 0.9      # trip below this canary accuracy
+    auto_repair: bool = True           # breaker ladder: BIST+repair first
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +116,7 @@ class RequestResult:
 class _Request:
     x: np.ndarray
     future: Future
+    deadline: Optional[float] = None   # absolute clock time; None = no limit
 
 
 class TCAMServer:
@@ -113,15 +147,23 @@ class TCAMServer:
         self._rng = rng or np.random.default_rng(0)
 
         # -- chip-static non-idealities: sampled once per server ----------
+        # The SAF mask is the chip's *persistent* stuck-element state — kept
+        # so repair can write new row content through the same stuck cells.
         layout = compiled.layout
+        self._intent = np.array(layout.cells, copy=True)  # programmed content
+        self._saf_mask: Optional[SAFMask] = None
         if nonideal.has_saf:
-            layout = dataclasses.replace(
-                layout,
-                cells=apply_saf(
-                    layout.cells, nonideal.p_sa0, nonideal.p_sa1, self._rng
-                ),
+            self._saf_mask = sample_saf(
+                self._intent.shape, nonideal.p_sa0, nonideal.p_sa1, self._rng
             )
+            faulted = apply_saf_mask(self._intent, self._saf_mask)
+            # padding columns beyond decoder+LUT width are OFF-OFF (masked,
+            # physically disconnected) — stuck elements there cannot reach
+            # the match line, so the served grid keeps them don't-care
+            faulted[:, 1 + layout.width:] = CELL_X
+            layout = dataclasses.replace(layout, cells=faulted)
         self._layout = layout
+        self._ideal_cells = np.array(compiled.layout.cells, copy=True)
         self._kmax: Optional[np.ndarray] = None
         if nonideal.sa_sigma > 0:
             offsets = self._rng.normal(
@@ -136,12 +178,24 @@ class TCAMServer:
         self.policy = BucketPolicy(
             max_batch=config.max_batch, min_bucket=config.min_bucket
         )
-        layout_id = hashlib.sha1(
-            self._layout.cells.tobytes() + bytes([self._layout.s % 251])
-        ).hexdigest()[:12]
-        self.cache = CompileCache(self._build, layout_id)
+        self.cache = CompileCache(self._build, self._layout_id())
 
-        self._batcher = AdaptiveBatcher(config.max_batch, config.max_delay_s)
+        # -- chip-health machinery ----------------------------------------
+        self.breaker = CircuitBreaker(threshold=config.canary_threshold)
+        self._canary: Optional[CanaryProbe] = None
+        n_canary = min(config.canary_size, config.max_batch)
+        if n_canary > 0:
+            self._canary = make_canary(compiled.layout, n_canary, self._rng)
+        self._batches_since_canary = 0
+        self._repair_reports: list[RepairReport] = []
+        # test/chaos seam: called with the batch's feature matrix right
+        # before kernel dispatch; raising simulates a transient device fault
+        self.compute_fault_hook: Optional[Callable[[np.ndarray], None]] = None
+
+        self._batcher = AdaptiveBatcher(
+            config.max_batch, config.max_delay_s,
+            timeout_s=config.request_timeout_s,
+        )
         self._cond = threading.Condition()
         self._outstanding = 0
         self._stop = False
@@ -154,6 +208,13 @@ class TCAMServer:
             self._thread.start()
 
     # -- engine & compile machinery ---------------------------------------
+    def _layout_id(self) -> str:
+        return hashlib.sha1(
+            self._layout.cells.tobytes()
+            + self._layout.classes.tobytes()
+            + bytes([self._layout.s % 251])
+        ).hexdigest()[:12]
+
     def _resolve_engine(self, requested: str) -> str:
         try:
             return select_engine(self._layout.cells, self._layout.s, requested)
@@ -201,13 +262,27 @@ class TCAMServer:
     # -- request intake ----------------------------------------------------
     def submit(self, x: np.ndarray) -> Future:
         """Enqueue one feature vector; the Future resolves to a
-        ``RequestResult`` once its batch has been served."""
+        ``RequestResult`` once its batch has been served — or to a typed
+        serving error (``Rejected`` on admission-control shedding,
+        ``DeadlineExceeded`` on queue expiry, ``ComputeFailed`` after the
+        retry budget)."""
         fut: Future = Future()
-        req = _Request(np.asarray(x, np.float64), fut)
+        now = self._clock()
+        deadline = None
+        if self._config.request_timeout_s is not None:
+            deadline = now + self._config.request_timeout_s
+        req = _Request(np.asarray(x, np.float64), fut, deadline)
         with self._cond:
             if self._closed:
                 raise RuntimeError("server is closed")
-            self._batcher.add(req, self._clock())
+            if (self._config.max_queue is not None
+                    and len(self._batcher) >= self._config.max_queue):
+                self.metrics_store.on_shed()
+                fut.set_exception(Rejected(
+                    f"queue full ({self._config.max_queue} pending)"
+                ))
+                return fut
+            self._batcher.add(req, now)
             self._outstanding += 1
             self.metrics_store.on_enqueue()
             self._cond.notify_all()
@@ -227,30 +302,45 @@ class TCAMServer:
                         None if dl is None else max(0.0, dl - now)
                     )
                     now = self._clock()
-                if self._stop and not len(self._batcher):
-                    return
+                # fail queue-expired requests promptly — the batcher's
+                # deadline() wakes us at first-expiry even when no flush is
+                # due, so dead requests stop holding bounded-queue capacity
+                expired = self._batcher.pop_expired(now)
                 deadline_flush = len(self._batcher) < self._config.max_batch
-                batch = self._batcher.pop_batch()
+                batch = (
+                    self._batcher.pop_batch()
+                    if (self._batcher.flush_due(now) or self._stop) else []
+                )
+                done = self._stop and not len(self._batcher) and not batch
+            if expired:
+                self._fail_expired(expired, now)
             if batch:
                 self._process(batch, deadline_flush)
+            if done:
+                return
 
     def pump(self, *, force: bool = False) -> int:
         """Synchronous mode: process at most one due batch (``force=True``
         flushes regardless of deadline); returns #requests served."""
         with self._cond:
             now = self._clock()
-            due = self._batcher.ready(now) or (force and len(self._batcher))
-            if not due:
-                return 0
+            expired = self._batcher.pop_expired(now)
+            due = (self._batcher.flush_due(now)
+                   or (force and len(self._batcher)))
             deadline_flush = len(self._batcher) < self._config.max_batch
-            batch = self._batcher.pop_batch()
+            batch = self._batcher.pop_batch() if due else []
+        if expired:
+            self._fail_expired(expired, now)
         if not batch:
             return 0
+        n = len(batch)
         self._process(batch, deadline_flush)
-        return len(batch)
+        return n
 
     def drain(self, timeout: Optional[float] = None) -> None:
-        """Block until every submitted request has been served."""
+        """Block until every submitted request has been served; raises
+        ``TimeoutError`` (counters intact) if it takes longer than
+        ``timeout`` seconds."""
         if self._thread is None:
             while self.pump(force=True):
                 pass
@@ -261,20 +351,67 @@ class TCAMServer:
             ):
                 raise TimeoutError("drain timed out")
 
+    def _fail_expired(self, expired: list, now: float) -> None:
+        """Resolve expired requests with ``DeadlineExceeded`` and release
+        their queue accounting."""
+        for p in expired:
+            p.item.future.set_exception(DeadlineExceeded(
+                f"request expired after {now - p.t_enqueue:.4f}s in queue"
+            ))
+        self.metrics_store.on_deadline_exceeded(len(expired))
+        with self._cond:
+            self._outstanding -= len(expired)
+            self._cond.notify_all()
+
+    def _expire_overdue(self, batch: list) -> list:
+        """Safety net at process time: fail requests that expired between
+        pop and dispatch; return the still-live remainder."""
+        now = self._clock()
+        live, expired = [], []
+        for p in batch:
+            req = p.item
+            if req.deadline is not None and now > req.deadline:
+                expired.append(p)
+            else:
+                live.append(p)
+        if expired:
+            self._fail_expired(expired, now)
+        return live
+
     def _process(self, batch: list, deadline_flush: bool) -> None:
-        try:
-            self._process_inner(batch, deadline_flush)
-        except Exception as e:
-            # fail the batch's futures instead of hanging drain(); the worker
-            # thread survives to serve subsequent batches.
-            for p in batch:
-                if not p.item.future.done():
-                    p.item.future.set_exception(e)
-            with self._cond:
-                self._outstanding -= len(batch)
-                self._cond.notify_all()
-            if self._thread is None:  # synchronous mode: surface to caller
-                raise
+        batch = self._expire_overdue(batch)
+        if not batch:
+            return
+        delay = self._config.retry_backoff_s
+        attempt = 0
+        while True:
+            try:
+                self._process_inner(batch, deadline_flush)
+                break
+            except Exception as e:
+                if attempt < self._config.max_retries:
+                    attempt += 1
+                    self.metrics_store.on_retry()
+                    time.sleep(delay)
+                    delay *= 2
+                    continue
+                # retry budget exhausted: fail the batch's futures instead of
+                # hanging drain(); the worker survives for subsequent batches
+                self.metrics_store.on_compute_failure()
+                err = ComputeFailed(
+                    f"batch compute failed after {attempt + 1} attempt(s): {e!r}"
+                )
+                err.__cause__ = e
+                for p in batch:
+                    if not p.item.future.done():
+                        p.item.future.set_exception(err)
+                with self._cond:
+                    self._outstanding -= len(batch)
+                    self._cond.notify_all()
+                if self._thread is None:  # synchronous mode: surface to caller
+                    raise err
+                break
+        self._maybe_canary()
 
     def _process_inner(self, batch: list, deadline_flush: bool) -> None:
         t_form = self._clock()
@@ -284,6 +421,8 @@ class TCAMServer:
         bucket = self.policy.bucket_for(n)
 
         X = np.stack([r.x for r in reqs])
+        if self.compute_fault_hook is not None:
+            self.compute_fault_hook(X)
         if self._spec.sigma_in > 0:
             X = X + self._rng.normal(0.0, self._spec.sigma_in, size=X.shape)
         xbits = encode_inputs(self._lut, X)
@@ -328,6 +467,116 @@ class TCAMServer:
             self._outstanding -= n
             self._cond.notify_all()
 
+    # -- chip health: BIST, repair, canary, breaker ------------------------
+    def self_test(self) -> BistReport:
+        """March-style BIST: probe every physical row of the (possibly
+        faulty) array against its programmed intent; per-row defect map."""
+        return run_bist(
+            self._layout.cells, self._intent,
+            used=1 + self._layout.width, n_rows=self._layout.n_rows,
+        )
+
+    def repair(
+        self,
+        defects: Optional[BistReport] = None,
+        priority: Optional[np.ndarray] = None,
+    ) -> RepairReport:
+        """Spare-row repair: remap BIST-flagged rows onto write-verified
+        spares, rebuild the compile cache, and report graceful degradation
+        (``report.degraded`` when spares ran out or ghosts remain)."""
+        if self._saf_mask is None:
+            raise RuntimeError(
+                "repair requires a chip with sampled stuck-at faults "
+                "(NonIdealSpec.has_saf)"
+            )
+        if defects is None:
+            defects = self.self_test()
+        new_layout, new_intent, report = repair_layout(
+            self._layout, self._intent, self._saf_mask,
+            defects.defective_rows, priority=priority,
+        )
+        self._layout, self._intent = new_layout, new_intent
+        self._repair_reports.append(report)
+        self.metrics_store.on_repair(report.rows_repaired)
+        self._rebuild_compute()
+        return report
+
+    def _rebuild_compute(self) -> None:
+        """Re-key the compile cache after the layout changed (repair) and
+        re-resolve engine legality (repair writes can add/remove CELL_MM)."""
+        if self.engine != "ref":
+            self.engine = self._resolve_engine(self._config.engine)
+        self.cache = CompileCache(self._build, self._layout_id())
+
+    def run_canary(self) -> float:
+        """Replay the golden vectors through the live compute path; returns
+        canary accuracy (and records it in the metrics)."""
+        if self._canary is None:
+            raise RuntimeError("canary disabled (canary_size <= 0)")
+        words = self._canary.words
+        n = len(self._canary)
+        bucket = self.policy.bucket_for(n)
+        xpad = np.zeros((bucket, words.shape[1]), np.uint8)
+        xpad[:n] = words
+        fn = self.cache.get(bucket, self.engine)
+        out = fn(jnp.asarray(xpad))
+        preds = np.asarray(out[0])[:n]
+        acc = self._canary.accuracy(preds)
+        self.metrics_store.on_canary(
+            acc >= self._config.canary_threshold, acc
+        )
+        return acc
+
+    def _maybe_canary(self) -> None:
+        if self._config.canary_every_batches <= 0 or self._canary is None:
+            return
+        self._batches_since_canary += 1
+        if self._batches_since_canary < self._config.canary_every_batches:
+            return
+        self._batches_since_canary = 0
+        acc = self.run_canary()
+        if self.breaker.observe(acc):
+            self.metrics_store.on_trip()
+            self._recover()
+
+    def _recover(self) -> None:
+        """Degradation ladder: repair the chip, re-vote the canary; if still
+        failing, fall back to the 'ref' engine; else mark FAILED (the server
+        keeps answering — degradation stays graceful)."""
+        thr = self._config.canary_threshold
+        if self._config.auto_repair and self._saf_mask is not None:
+            self.repair()
+            acc = self.run_canary()
+            if acc >= thr:
+                self.breaker.recovered("repair", acc)
+                return
+        if self.engine != "ref":
+            self.engine = "ref"
+            self.cache = CompileCache(self._build, self._layout_id())
+            acc = self.run_canary()
+            if acc >= thr:
+                self.breaker.recovered("fallback_ref", acc)
+                return
+        self.breaker.failed(self.breaker.last_accuracy)
+
+    def health(self) -> dict:
+        """Chip-health snapshot: breaker state, canary, spares, repairs."""
+        spares_free = int(
+            (self._intent[self._layout.spare_row_indices, 0] == CELL_1).sum()
+        ) if self._layout.n_spares else 0
+        return {
+            "state": self.breaker.state,
+            "engine": self.engine,
+            "breaker": self.breaker.snapshot(),
+            "spares_total": self._layout.n_spares,
+            "spares_free": spares_free,
+            "repair_attempts": len(self._repair_reports),
+            "last_repair": (
+                self._repair_reports[-1].summary()
+                if self._repair_reports else None
+            ),
+        }
+
     # -- convenience & lifecycle -------------------------------------------
     def serve(self, X: np.ndarray) -> list[RequestResult]:
         """Submit every row of X, wait for completion, return results in
@@ -338,18 +587,20 @@ class TCAMServer:
 
     def metrics(self) -> dict:
         """JSON-ready snapshot: serving counters/latency + compile cache +
-        modelled ReCAM hardware figures of merit."""
+        chip health + modelled ReCAM hardware figures of merit."""
         lay, hw = self._layout, self._hw
         fm = f_max(lay.s, hw)
         return self.metrics_store.snapshot(
             engine=self.engine,
             buckets=list(self.policy.buckets),
             jit_cache=self.cache.stats(),
+            health=self.health(),
             modelled_mdecs_seq=fm / lay.n_cwd / 1e6,
             modelled_mdecs_pipe=fm / hw.pipeline_ii_cycles / 1e6,
             layout={"rows": int(lay.cells.shape[0]),
                     "width": int(lay.cells.shape[1]),
-                    "s": lay.s, "n_rwd": lay.n_rwd, "n_cwd": lay.n_cwd},
+                    "s": lay.s, "n_rwd": lay.n_rwd, "n_cwd": lay.n_cwd,
+                    "spares": lay.n_spares},
         )
 
     def close(self) -> None:

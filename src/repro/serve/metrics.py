@@ -83,6 +83,17 @@ class ServeMetrics:
         self.engine_fallbacks = 0     # illegal engine requests downgraded
         self.energy_j = 0.0           # Σ modelled energy of served decisions
         self.active_evals = 0         # Σ modelled active row-division evals
+        # -- reliability / protection counters --------------------------------
+        self.shed = 0                 # requests rejected at admission (queue full)
+        self.deadline_exceeded = 0    # requests expired in queue before dispatch
+        self.retries = 0              # transient compute failures retried
+        self.compute_failures = 0     # batches failed after retry budget
+        self.canary_runs = 0
+        self.canary_failures = 0      # canary accuracy below threshold
+        self.breaker_trips = 0
+        self.repairs = 0              # repair attempts (BIST + spare remap)
+        self.rows_repaired = 0
+        self.last_canary_acc = float("nan")
         self.queue = LatencyStats()
         self.compute = LatencyStats()
         self.total = LatencyStats()
@@ -90,6 +101,37 @@ class ServeMetrics:
     def on_enqueue(self, n: int = 1) -> None:
         with self._lock:
             self.requests_enqueued += n
+
+    def on_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.shed += n
+
+    def on_deadline_exceeded(self, n: int = 1) -> None:
+        with self._lock:
+            self.deadline_exceeded += n
+
+    def on_retry(self) -> None:
+        with self._lock:
+            self.retries += 1
+
+    def on_compute_failure(self) -> None:
+        with self._lock:
+            self.compute_failures += 1
+
+    def on_canary(self, ok: bool, accuracy: float) -> None:
+        with self._lock:
+            self.canary_runs += 1
+            self.canary_failures += int(not ok)
+            self.last_canary_acc = accuracy
+
+    def on_trip(self) -> None:
+        with self._lock:
+            self.breaker_trips += 1
+
+    def on_repair(self, rows: int) -> None:
+        with self._lock:
+            self.repairs += 1
+            self.rows_repaired += rows
 
     def on_batch(
         self,
@@ -131,6 +173,18 @@ class ServeMetrics:
                     self.energy_j / served * 1e9 if served else float("nan")
                 ),
                 "active_evals": self.active_evals,
+                "reliability": {
+                    "shed": self.shed,
+                    "deadline_exceeded": self.deadline_exceeded,
+                    "retries": self.retries,
+                    "compute_failures": self.compute_failures,
+                    "canary_runs": self.canary_runs,
+                    "canary_failures": self.canary_failures,
+                    "breaker_trips": self.breaker_trips,
+                    "repairs": self.repairs,
+                    "rows_repaired": self.rows_repaired,
+                    "last_canary_acc": self.last_canary_acc,
+                },
             }
         out["queue_latency"] = self.queue.summary_ms()
         out["compute_latency"] = self.compute.summary_ms()

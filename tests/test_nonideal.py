@@ -1,8 +1,11 @@
 """Hardware non-idealities (paper §II.C.2, Table I, Fig 7)."""
+import warnings
+
 import numpy as np
 import pytest
 
-from repro.core import DT2CAM, NonIdealSpec, apply_saf, noisy_inputs
+from repro.core import (DT2CAM, NonIdealSpec, apply_saf, apply_saf_mask,
+                        noisy_inputs, sample_saf)
 from repro.core.lut import CELL_0, CELL_1, CELL_MM, CELL_X
 from repro.dt import load_split
 
@@ -43,6 +46,51 @@ def test_input_noise_changes_encoding_not_catastrophically():
     base = m.infer(Xte).accuracy(yte)
     small = m.infer(Xte, nonideal=NonIdealSpec(sigma_in=0.001)).accuracy(yte)
     assert abs(base - small) < 0.1
+
+
+def test_saf_tie_break_is_50_50():
+    """When both independent SA draws fire on one element, a fair coin picks
+    the winner (the documented behavior).  With p_sa0 = p_sa1 = 0.5:
+    P(sa0) = P(only fire0) + P(both)/2 = 0.25 + 0.125 = 0.375 — a sharp pin
+    distinguishing the coin from either 'sa0 wins' (0.5) or
+    'sa1 wins' (0.25)."""
+    mask = sample_saf((400, 400), 0.5, 0.5, np.random.default_rng(3))
+    for arr in (mask.sa0_r1, mask.sa1_r1, mask.sa0_r2, mask.sa1_r2):
+        assert 0.36 < arr.mean() < 0.39
+    # an element is never stuck both ways
+    assert not (mask.sa0_r1 & mask.sa1_r1).any()
+    assert not (mask.sa0_r2 & mask.sa1_r2).any()
+
+
+def test_saf_missing_rng_deprecated():
+    cells = np.full((16, 16), CELL_0, np.int8)
+    with pytest.warns(DeprecationWarning, match="apply_saf"):
+        apply_saf(cells, 0.5, 0.0)
+    with pytest.warns(DeprecationWarning, match="noisy_inputs"):
+        noisy_inputs(np.zeros((4, 4)), 0.1)
+    # explicit rng and the zero-probability shortcuts must stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        apply_saf(cells, 0.5, 0.0, np.random.default_rng(0))
+        apply_saf(cells, 0.0, 0.0)
+        noisy_inputs(np.zeros((4, 4)), 0.1, np.random.default_rng(0))
+        noisy_inputs(np.zeros((4, 4)), 0.0)
+
+
+def test_apply_saf_mask_idempotent_and_write_through():
+    rng = np.random.default_rng(4)
+    cells = rng.integers(0, 4, (60, 40)).astype(np.int8)
+    mask = sample_saf(cells.shape, 0.1, 0.1, rng)
+    once = apply_saf_mask(cells, mask)
+    np.testing.assert_array_equal(once, apply_saf_mask(once, mask))
+    # faults are persistent chip state: writing different content goes
+    # through the same stuck elements; healthy cells take the new value
+    other = rng.integers(0, 4, (60, 40)).astype(np.int8)
+    out = apply_saf_mask(other, mask)
+    healthy = ~mask.any_fault
+    np.testing.assert_array_equal(out[healthy], other[healthy])
+    with pytest.raises(ValueError):
+        apply_saf_mask(cells[:10], mask)
 
 
 def test_sa_variability_monotone_in_sigma():

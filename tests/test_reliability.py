@@ -1,0 +1,317 @@
+"""Reliability layer: BIST, spare-row repair, redundancy voting, canary and
+the serving circuit breaker (chip-health tentpole)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import DT2CAM, NonIdealSpec, compile_tree
+from repro.core.encode import encode_inputs
+from repro.core.lut import CELL_0, CELL_1, CELL_MM, CELL_X
+from repro.core.nonideal import SAFMask, apply_saf_mask, sample_saf
+from repro.core.simulate import simulate
+from repro.dt import load_split
+from repro.reliability import (
+    BreakerState,
+    CircuitBreaker,
+    ReplicatedServer,
+    behavior_changed_rows,
+    majority_vote,
+    make_canary,
+    march_probes,
+    repair_layout,
+    row_signatures,
+    row_utilization,
+    run_bist,
+)
+from repro.serve import ServeConfig, TCAMServer
+
+
+@pytest.fixture(scope="module")
+def iris_model():
+    Xtr, ytr, Xte, yte = load_split("iris")
+    m = DT2CAM(s=16, max_depth=5, spare_rows=24).fit(Xtr, ytr)
+    return m, Xtr, ytr, Xte, yte
+
+
+def _fault_chip(layout, p, seed):
+    mask = sample_saf(layout.cells.shape, p, p, np.random.default_rng(seed))
+    cells = apply_saf_mask(layout.cells, mask)
+    return dataclasses.replace(layout, cells=cells), mask
+
+
+# --------------------------------------------------------------------------
+# behavior signatures & march probes (pure logic)
+# --------------------------------------------------------------------------
+def test_row_signatures_dead_and_literals():
+    used = 5
+    cells = np.array([
+        [CELL_0, CELL_0, CELL_1, CELL_X, CELL_X],    # alive: 0@1, 1@2
+        [CELL_1, CELL_X, CELL_X, CELL_X, CELL_X],    # decoder 1 -> dead
+        [CELL_0, CELL_X, CELL_MM, CELL_X, CELL_X],   # CELL_MM -> dead
+    ], np.int8)
+    dead, zeros, ones = row_signatures(cells, used)
+    assert list(dead) == [False, True, True]
+    assert list(zeros[0]) == [True, False, False, False]
+    assert list(ones[0]) == [False, True, False, False]
+
+
+def test_behavior_changed_rows_ignores_invisible_faults():
+    used = 4
+    intent = np.array([[CELL_0, CELL_0, CELL_X, CELL_X]], np.int8)
+    same = intent.copy()
+    # decoder 0 -> X is invisible: queries always carry '0' there
+    same[0, 0] = CELL_X
+    assert not behavior_changed_rows(intent, same, used)[0]
+    flipped = intent.copy()
+    flipped[0, 1] = CELL_1                    # literal flip: visible
+    assert behavior_changed_rows(intent, flipped, used)[0]
+
+
+def test_march_probes_shapes_and_decoder_pinned():
+    row = np.array([CELL_0, CELL_1, CELL_0, CELL_X], np.int8)
+    probes = march_probes(row, 4)
+    assert probes.shape == (4, 4)
+    assert (probes[:, 0] == 0).all()          # decoder bit never probed '1'
+    assert list(probes[0]) == [0, 1, 0, 0]    # stored word
+    # each walking probe flips exactly one body bit of the stored word
+    for i in range(1, 4):
+        assert (probes[i] != probes[0]).sum() == 1
+
+
+# --------------------------------------------------------------------------
+# BIST detection & coverage
+# --------------------------------------------------------------------------
+def test_bist_clean_chip_reports_nothing(iris_model):
+    m, *_ = iris_model
+    lay = m.compiled.layout
+    rep = run_bist(lay.cells, lay.cells, used=1 + lay.width,
+                   n_rows=lay.cells.shape[0])
+    assert rep.n_defective == 0
+    assert rep.coverage(np.zeros(lay.cells.shape[0], bool)) == 1.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bist_coverage_at_2pct(iris_model, seed):
+    """Acceptance bar: >= 90% of behavior-changing rows detected at
+    p_sa0 = p_sa1 = 2%."""
+    m, *_ = iris_model
+    lay = m.compiled.layout
+    used = 1 + lay.width
+    flay, _ = _fault_chip(lay, 0.02, seed)
+    rep = run_bist(flay.cells, lay.cells, used=used,
+                   n_rows=lay.cells.shape[0])
+    changed = behavior_changed_rows(lay.cells, flay.cells, used)
+    assert rep.coverage(changed) >= 0.90
+    # BIST never cries wolf on behaviorally-identical rows
+    assert not (rep.detected & ~changed).any()
+
+
+def test_bist_catches_rogue_row_come_alive():
+    """A dead-intent spare whose faults bring it alive with several
+    1-literals evades intent-derived walking probes; the readback (M2/M3)
+    elements must catch it."""
+    used = 6
+    intent = np.full((1, 8), CELL_X, np.int8)
+    intent[0, 0] = CELL_1                     # dead rogue row
+    actual = intent.copy()
+    actual[0, 0] = CELL_0                     # decoder fault: alive
+    actual[0, 2] = CELL_1                     # needs THREE 1s at once
+    actual[0, 3] = CELL_1
+    actual[0, 4] = CELL_1
+    rep = run_bist(actual, intent, used=used, n_rows=0)
+    assert rep.detected[0]
+
+
+# --------------------------------------------------------------------------
+# spare-row repair
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_repair_recovers_accuracy_at_2pct(iris_model, seed):
+    """Acceptance bar: post-repair accuracy within 1% of the ideal chip."""
+    m, Xtr, ytr, Xte, yte = iris_model
+    lay, lut = m.compiled.layout, m.compiled.lut
+    used = 1 + lay.width
+    flay, mask = _fault_chip(lay, 0.02, seed)
+    rep = run_bist(flay.cells, lay.cells, used=used,
+                   n_rows=lay.cells.shape[0])
+    prio = row_utilization(lay, encode_inputs(lut, Xtr))
+    rlay, rintent, rr = repair_layout(
+        flay, lay.cells, mask, rep.defective_rows, priority=prio
+    )
+    xb = encode_inputs(lut, Xte)
+    acc_ideal = (simulate(lay, xb).predictions == yte).mean()
+    acc_rep = (simulate(rlay, xb).predictions == yte).mean()
+    assert acc_rep >= acc_ideal - 0.01
+    # repair is honest: the reported chip is the intent seen through the mask
+    expect = apply_saf_mask(rintent, mask)
+    expect[:, used:] = CELL_X                 # masked columns are OFF-OFF
+    np.testing.assert_array_equal(rlay.cells, expect)
+    # a re-test against the updated intent comes back clean
+    rep2 = run_bist(rlay.cells, rintent, used=used,
+                    n_rows=lay.cells.shape[0])
+    assert not behavior_changed_rows(rintent, rlay.cells, used).any()
+    assert rep2.n_defective == 0
+
+
+def test_repair_degrades_gracefully_without_spares(iris_model):
+    """No spare pool: repair must not raise — defective rows are reported
+    as unrepaired and the report flags degradation."""
+    m, *_ = iris_model
+    base = compile_tree(m.compiled.tree, m.s, spare_rows=0)
+    lay = base.layout
+    # consume the natural tile-padding spares by marking them used
+    intent = lay.cells.copy()
+    intent[lay.n_rows:, 0] = CELL_0
+    lay = dataclasses.replace(lay, cells=intent)
+    flay, mask = _fault_chip(lay, 0.05, 0)
+    used = 1 + lay.width
+    rep = run_bist(flay.cells, intent, used=used, n_rows=lay.cells.shape[0])
+    defect_lut = [r for r in rep.defective_rows if r < lay.n_rows]
+    if not defect_lut:
+        pytest.skip("no LUT-row defects drawn at this seed")
+    _, _, rr = repair_layout(flay, intent, mask, rep.defective_rows)
+    assert rr.unrepaired and rr.degraded
+    assert rr.spares_used == 0
+
+
+def test_repair_priority_orders_heavy_rows(iris_model):
+    m, Xtr, *_ = iris_model
+    lay, lut = m.compiled.layout, m.compiled.lut
+    util = row_utilization(lay, encode_inputs(lut, Xtr))
+    assert util.shape == (lay.cells.shape[0],)
+    assert util.sum() > 0
+    assert util[lay.n_rows:].sum() == 0       # spares serve no traffic
+
+
+# --------------------------------------------------------------------------
+# redundancy voting
+# --------------------------------------------------------------------------
+def test_majority_vote_plurality_and_ties():
+    assert majority_vote([1, 1, 2]) == 1
+    assert majority_vote([2, 2, 1, 1, 0]) == 1   # tie -> smallest class
+    assert majority_vote([3]) == 3
+
+
+def test_replicated_server_votes_out_single_chip_errors(iris_model):
+    m, Xtr, ytr, Xte, yte = iris_model
+    spec = NonIdealSpec(p_sa0=0.02, p_sa1=0.02)
+    cfg = ServeConfig(engine="ref", background=False, max_batch=32)
+    with ReplicatedServer(m.compiled, k=5, nonideal=spec,
+                          rng=np.random.default_rng(11), config=cfg) as rs:
+        voted = rs.serve(Xte)
+        met = rs.metrics()
+    acc_voted = np.mean([v.prediction for v in voted] == yte)
+    assert met["k"] == 5 and met["requests"] == len(Xte)
+    assert 0.0 <= met["disagreement_rate"] <= 1.0
+    # each replica sampled its own chip: the k layouts are not all identical
+    grids = [r._layout.cells.tobytes() for r in rs.replicas]
+    assert len(set(grids)) > 1
+    # voting beats the worst single chip
+    per_chip = [np.mean([v.results[i].prediction for v in voted] == yte)
+                for i in range(5)]
+    assert acc_voted >= min(per_chip)
+    for v in voted:
+        assert v.n_answered == 5
+        assert v.n_agree == sum(p == v.prediction
+                                for p in v.votes if p is not None)
+
+
+def test_replicated_server_requires_positive_k(iris_model):
+    m, *_ = iris_model
+    with pytest.raises(ValueError):
+        ReplicatedServer(m.compiled, k=0)
+
+
+# --------------------------------------------------------------------------
+# canary & circuit breaker
+# --------------------------------------------------------------------------
+def test_canary_perfect_on_ideal_chip(iris_model):
+    m, *_ = iris_model
+    with TCAMServer(m.compiled,
+                    config=ServeConfig(background=False)) as s:
+        assert s.run_canary() == 1.0
+        assert s.health()["state"] == BreakerState.HEALTHY
+
+
+def test_make_canary_expected_matches_oracle(iris_model):
+    m, *_ = iris_model
+    lay = m.compiled.layout
+    can = make_canary(lay, 16, np.random.default_rng(0))
+    assert len(can) == 16
+    assert (can.words[:, 0] == 0).all()       # reachable queries only
+    preds = simulate(lay, can.words[:, 1:1 + lay.width]).predictions
+    assert can.accuracy(preds) == 1.0
+
+
+def test_breaker_state_machine():
+    b = CircuitBreaker(threshold=0.9)
+    assert not b.observe(0.95) and b.state == BreakerState.HEALTHY
+    assert b.observe(0.5) and b.state == BreakerState.DEGRADED
+    assert b.trips == 1
+    b.recovered("repair", 0.97)
+    assert b.state == BreakerState.REPAIRED and b.recovery == "repair"
+    assert b.observe(0.3)                     # re-trip from repaired
+    assert b.trips == 2
+    b.failed(0.3)
+    assert b.state == BreakerState.FAILED
+    assert not b.observe(0.95)                # spontaneous recovery
+    assert b.state == BreakerState.HEALTHY
+    snap = b.snapshot()
+    assert snap["trips"] == 2 and snap["last_accuracy"] == 0.95
+
+
+def test_server_canary_trips_and_repairs(iris_model):
+    """End-to-end degradation ladder: serving a faulty chip trips the
+    breaker, which runs BIST + spare-row repair and re-votes the canary."""
+    m, Xtr, ytr, Xte, yte = iris_model
+    spec = NonIdealSpec(p_sa0=0.05, p_sa1=0.05)
+    cfg = ServeConfig(background=False, max_batch=16, engine="ref",
+                      canary_every_batches=1, canary_size=64)
+    for seed in range(6):
+        s = TCAMServer(m.compiled, nonideal=spec,
+                       rng=np.random.default_rng(seed), config=cfg)
+        tripped = s.run_canary() < cfg.canary_threshold
+        if not tripped:
+            s.close()
+            continue
+        s.serve(Xte)                          # batches trigger the canary
+        h = s.health()
+        assert h["breaker"]["trips"] >= 1
+        assert h["state"] in (BreakerState.REPAIRED, BreakerState.FALLBACK,
+                              BreakerState.FAILED)
+        if h["state"] == BreakerState.REPAIRED:
+            assert h["repair_attempts"] >= 1
+            assert s.run_canary() >= cfg.canary_threshold
+        rel = s.metrics()["reliability"]
+        assert rel["breaker_trips"] == h["breaker"]["trips"]
+        assert rel["canary_runs"] > 0
+        s.close()
+        return
+    pytest.fail("no seed produced a tripping chip at p=5%")
+
+
+def test_server_self_test_and_manual_repair(iris_model):
+    m, Xtr, *_ = iris_model
+    spec = NonIdealSpec(p_sa0=0.02, p_sa1=0.02)
+    s = TCAMServer(m.compiled, nonideal=spec,
+                   rng=np.random.default_rng(3),
+                   config=ServeConfig(background=False, engine="ref"))
+    rep = s.self_test()
+    h0 = s.health()
+    assert h0["spares_total"] > 0
+    if rep.n_defective:
+        report = s.repair(rep)
+        assert s.metrics()["reliability"]["repairs"] == 1
+        assert s.health()["spares_free"] <= h0["spares_free"]
+        # post-repair self-test is clean
+        assert s.self_test().n_defective == 0
+    s.close()
+
+
+def test_repair_without_saf_mask_raises(iris_model):
+    m, *_ = iris_model
+    with TCAMServer(m.compiled,
+                    config=ServeConfig(background=False)) as s:
+        with pytest.raises(RuntimeError, match="stuck-at"):
+            s.repair()

@@ -2,13 +2,15 @@
 engine fallback, and the >=1k-request smoke test from the PR acceptance
 criteria."""
 import threading
+import time
 
 import numpy as np
 import pytest
 
 from repro.core import DT2CAM, NonIdealSpec
 from repro.dt import load_split
-from repro.serve import (AdaptiveBatcher, BucketPolicy, LatencyStats,
+from repro.serve import (AdaptiveBatcher, BucketPolicy, ComputeFailed,
+                         DeadlineExceeded, LatencyStats, Rejected,
                          ServeConfig, TCAMServer)
 
 
@@ -50,6 +52,25 @@ def test_adaptive_batcher_flush_rules():
     batch = b.pop_batch()
     assert [p.item for p in batch] == list("abcd")   # FIFO order
     assert len(b) == 0 and not b.ready(2.0)
+
+
+def test_adaptive_batcher_expiry_awareness():
+    b = AdaptiveBatcher(max_batch=8, max_delay_s=1.0, timeout_s=0.1)
+    b.add("a", 0.0)
+    b.add("b", 0.05)
+    assert b.deadline() == pytest.approx(0.1)    # expiry before flush
+    assert not b.flush_due(0.2) and b.ready(0.2)  # woken by expiry alone
+    b.add("c", 0.15)
+    assert [p.item for p in b.pop_expired(0.2)] == ["a", "b"]
+    assert [p.item for p in b.pop_expired(0.2)] == []   # "c" still live
+    assert len(b) == 1
+    assert b.deadline() == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        AdaptiveBatcher(max_batch=8, max_delay_s=1.0, timeout_s=-1.0)
+    # without a timeout the old flush-only semantics are unchanged
+    nb = AdaptiveBatcher(max_batch=8, max_delay_s=1.0)
+    nb.add("x", 0.0)
+    assert nb.deadline() == 1.0 and nb.pop_expired(100.0) == []
 
 
 def test_latency_stats_percentiles():
@@ -202,3 +223,142 @@ def test_concurrent_submitters_background(iris_model):
     assert len(results) == 200
     assert stats["requests_served"] == 200
     assert stats["jit_cache"]["misses"] <= len(srv.policy.buckets)
+
+
+# --------------------------------------------------------------------------
+# serving protections: worker survival, load shedding, deadlines, retries
+# --------------------------------------------------------------------------
+def test_worker_survives_batch_compute_failure(iris_model):
+    """A batch whose kernel raises fails its futures with ComputeFailed,
+    decrements the outstanding count, and leaves the worker alive for the
+    next batch."""
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=8, min_bucket=8, max_delay_s=0.001)
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        boom = [True]
+
+        def hook(_X):
+            if boom[0]:
+                raise RuntimeError("injected device fault")
+
+        srv.compute_fault_hook = hook
+        futs = srv.submit_many(Xte[:8])
+        srv.drain(timeout=30)
+        for f in futs:
+            err = f.exception(timeout=5)
+            assert isinstance(err, ComputeFailed)
+            assert isinstance(err.__cause__, RuntimeError)
+        assert srv._outstanding == 0
+        assert srv.metrics()["reliability"]["compute_failures"] == 1
+
+        boom[0] = False                          # worker must still be alive
+        res = [f.result(timeout=30) for f in srv.submit_many(Xte[:8])]
+        assert len(res) == 8
+        assert srv._outstanding == 0
+
+
+def test_sync_compute_failure_raises_and_recovers(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(background=False, max_batch=8)
+    srv = TCAMServer(m.compiled, config=cfg)
+
+    def hook(_X):
+        raise RuntimeError("injected device fault")
+
+    srv.compute_fault_hook = hook
+    futs = srv.submit_many(Xte[:4])
+    with pytest.raises(ComputeFailed):           # sync mode surfaces the error
+        srv.drain()
+    assert all(isinstance(f.exception(), ComputeFailed) for f in futs)
+    assert srv._outstanding == 0
+    srv.compute_fault_hook = None
+    assert len(srv.serve(Xte[:4])) == 4
+    srv.close()
+
+
+def test_drain_timeout_raises_with_counters_intact(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=4, min_bucket=4, max_delay_s=0.001)
+    gate = threading.Event()
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        srv.compute_fault_hook = lambda _X: gate.wait(30)
+        futs = srv.submit_many(Xte[:4])
+        with pytest.raises(TimeoutError):
+            srv.drain(timeout=0.1)
+        gate.set()                               # un-stick the worker
+        srv.drain(timeout=30)
+        assert all(f.result(timeout=5) for f in futs)
+        assert srv._outstanding == 0
+        assert srv.metrics()["requests_served"] == 4
+
+
+def test_bounded_queue_sheds_with_typed_rejection(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=4, min_bucket=4, max_delay_s=0.001,
+                      max_queue=4)
+    gate = threading.Event()
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        srv.compute_fault_hook = lambda _X: gate.wait(30)
+        futs = [srv.submit(Xte[i % len(Xte)]) for i in range(30)]
+        shed = [f for f in futs if f.done()
+                and isinstance(f.exception(), Rejected)]
+        assert shed                              # queue cap enforced
+        gate.set()
+        srv.drain(timeout=30)
+        assert all(f.done() for f in futs)       # every future resolved
+        assert srv.metrics()["reliability"]["shed"] == len(shed)
+
+
+def test_request_deadline_expires_in_queue(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=4, min_bucket=4, max_delay_s=0.001,
+                      request_timeout_s=0.02)
+    gate = threading.Event()
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        srv.compute_fault_hook = lambda _X: gate.wait(30)
+        futs = srv.submit_many(Xte[:12])         # batch 1 stalls; rest queue
+        time.sleep(0.1)                          # queued requests expire
+        gate.set()
+        srv.drain(timeout=30)
+        expired = [f for f in futs
+                   if isinstance(f.exception(), DeadlineExceeded)]
+        assert expired
+        assert all(f.done() for f in futs)
+        assert (srv.metrics()["reliability"]["deadline_exceeded"]
+                == len(expired))
+
+
+def test_deadline_fires_without_flush_trigger(iris_model):
+    # a lone queued request whose timeout is far shorter than max_delay_s
+    # must be failed at expiry — the worker wakes on the batcher's expiry
+    # deadline, not the (10 s away) flush deadline
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(max_batch=64, max_delay_s=10.0,
+                      request_timeout_s=0.05)
+    with TCAMServer(m.compiled, config=cfg) as srv:
+        fut = srv.submit(Xte[0])
+        t0 = time.time()
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=5)
+        assert time.time() - t0 < 2.0            # nowhere near max_delay_s
+        assert srv.metrics()["reliability"]["deadline_exceeded"] == 1
+
+
+def test_retry_budget_absorbs_transient_faults(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(background=False, max_batch=8,
+                      max_retries=3, retry_backoff_s=0.001)
+    srv = TCAMServer(m.compiled, config=cfg)
+    fails = [2]
+
+    def flaky(_X):
+        if fails[0] > 0:
+            fails[0] -= 1
+            raise RuntimeError("transient")
+
+    srv.compute_fault_hook = flaky
+    res = srv.serve(Xte[:8])
+    assert len(res) == 8                         # recovered within budget
+    rel = srv.metrics()["reliability"]
+    assert rel["retries"] == 2 and rel["compute_failures"] == 0
+    srv.close()
