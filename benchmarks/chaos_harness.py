@@ -32,9 +32,8 @@ import numpy as np
 
 from benchmarks.common import ART, fitted_tree
 from repro.core import compile_tree
-from repro.core.encode import encode_inputs
-from repro.core.nonideal import NonIdealSpec, apply_saf_mask, sample_saf
-from repro.core.simulate import simulate
+from repro.core import (NonIdealSpec, apply_saf_mask, encode_inputs,
+                        sample_saf, simulate)
 from repro.reliability import (
     ReplicatedServer,
     behavior_changed_rows,

@@ -7,8 +7,7 @@ decision; the paper also reports means).
 import numpy as np
 
 from repro.core import synthesize
-from repro.core.encode import encode_inputs
-from repro.core.simulate import simulate
+from repro.core import encode_inputs, simulate
 
 from .common import compiled, emit
 

@@ -4,9 +4,7 @@ Diabetes / Cancer / Covid at two tile sizes."""
 import numpy as np
 
 from repro.core import synthesize
-from repro.core.encode import encode_inputs
-from repro.core.nonideal import apply_saf, noisy_inputs
-from repro.core.simulate import simulate
+from repro.core import apply_saf, encode_inputs, noisy_inputs, simulate
 from repro.core import predict
 
 from .common import compiled, emit

@@ -18,9 +18,7 @@ import numpy as np
 
 import jax
 
-from repro.core.encode import encode_inputs
-from repro.core.lut import bitplanes
-from repro.core.simulate import simulate
+from repro.core import bitplanes, encode_inputs, simulate
 from repro.kernels import tcam_match_ref, tcam_match_packed_ref, pack_bits
 
 from .common import compiled, emit

@@ -12,9 +12,7 @@ import os
 import numpy as np
 
 from repro.core import compile_tree, train_tree
-from repro.core.encode import encode_inputs
-from repro.core.simulate import simulate
-from repro.core.energy import DEFAULT_HW, f_max
+from repro.core import DEFAULT_HW, encode_inputs, f_max, simulate
 
 from .common import ART, emit
 

@@ -1,0 +1,132 @@
+"""DT2CAM reproduction — blessed public API.
+
+Import policy (see README "Import policy"): user code — examples, benchmarks,
+notebooks, downstream services — imports from **this** module (or the four
+stable sub-packages ``repro.core``, ``repro.forest``, ``repro.serve``,
+``repro.dt``), never from deep module paths like ``repro.core.compiler`` or
+``repro.serve.engine``.  Deep paths are implementation detail and move
+without deprecation; everything in ``__all__`` below is covered by the
+one-release deprecation policy.
+
+Single tree:
+
+    >>> import repro
+    >>> model = repro.DT2CAM(s=128).fit(X, y)
+    >>> res = model.infer(Xq)                       # numpy oracle
+    >>> res = model.infer(Xq, backend="jax")        # Pallas kernels
+
+Forest (multi-bank):
+
+    >>> forest = repro.compile_forest(sklearn_rf, s=128)
+    >>> res = repro.forest_infer_ref(forest, Xq)    # numpy oracle
+    >>> ex = repro.ForestExecutor(forest)           # banked jax execution
+    >>> res = ex.infer(Xq)
+
+Serving (both single- and multi-bank models):
+
+    >>> with repro.TCAMServer(compiled) as srv:
+    ...     preds = [r.prediction for r in srv.serve(Xq)]
+
+Everything importable eagerly here is numpy-only; jax-dependent names
+(``TCAMServer``, ``ForestExecutor``, the kernel entry points) load on first
+access via module ``__getattr__``.
+"""
+from .core import (
+    CELL_0,
+    CELL_1,
+    CELL_MM,
+    CELL_X,
+    DEFAULT_HW,
+    DT2CAM,
+    IDEAL,
+    CompiledDT,
+    DecisionTree,
+    FeatureMismatch,
+    HardwareParams,
+    NonIdealSpec,
+    RuleTable,
+    SAFMask,
+    SimResult,
+    TCAMLayout,
+    TernaryLUT,
+    bank_figures,
+    check_feature_count,
+    compile_tree,
+    encode_inputs,
+    encode_table,
+    forest_figures,
+    reduce_tree,
+    simulate,
+    synthesize,
+    train_tree,
+)
+from .dt import DATASETS, load, load_split, normalize
+from .forest import (
+    CompiledForest,
+    ForestBank,
+    ForestPlan,
+    ForestResult,
+    aggregate_votes,
+    compile_forest,
+    forest_infer_ref,
+    plan_forest,
+    train_forest,
+)
+
+__all__ = [
+    # core: compile + simulate
+    "DT2CAM", "CompiledDT", "compile_tree", "DecisionTree", "train_tree",
+    "RuleTable", "reduce_tree", "encode_table", "encode_inputs",
+    "TernaryLUT", "TCAMLayout", "synthesize", "simulate", "SimResult",
+    "CELL_0", "CELL_1", "CELL_X", "CELL_MM",
+    # validation + non-idealities
+    "FeatureMismatch", "check_feature_count",
+    "NonIdealSpec", "IDEAL", "SAFMask",
+    # hardware model
+    "HardwareParams", "DEFAULT_HW", "bank_figures", "forest_figures",
+    # forests
+    "CompiledForest", "ForestBank", "ForestResult", "compile_forest",
+    "train_forest", "forest_infer_ref", "aggregate_votes",
+    "ForestPlan", "plan_forest",
+    # datasets
+    "DATASETS", "load", "load_split", "normalize",
+    # jax-dependent (lazy): kernels
+    "tcam_infer", "tcam_match", "tcam_match_banked", "ENGINES",
+    "BANKED_ENGINES", "select_engine", "finalize_result",
+    # jax-dependent (lazy): executors + serving
+    "ForestExecutor", "FOREST_ENGINES",
+    "TCAMServer", "ServeConfig", "RequestResult",
+    "ServingError", "Rejected", "DeadlineExceeded", "ComputeFailed",
+]
+
+_LAZY = {
+    "tcam_infer": "kernels",
+    "tcam_match": "kernels",
+    "tcam_match_banked": "kernels",
+    "ENGINES": "kernels",
+    "BANKED_ENGINES": "kernels",
+    "select_engine": "kernels",
+    "finalize_result": "kernels",
+    "ForestExecutor": "forest",
+    "FOREST_ENGINES": "forest",
+    "TCAMServer": "serve",
+    "ServeConfig": "serve",
+    "RequestResult": "serve",
+    "ServingError": "serve",
+    "Rejected": "serve",
+    "DeadlineExceeded": "serve",
+    "ComputeFailed": "serve",
+}
+
+
+def __getattr__(name: str):
+    pkg = _LAZY.get(name)
+    if pkg is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{pkg}", __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

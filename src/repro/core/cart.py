@@ -15,7 +15,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["DecisionTree", "train_tree", "predict", "tree_paths"]
+__all__ = ["DecisionTree", "train_tree", "predict", "tree_paths", "tree_leaf_ids"]
 
 
 @dataclasses.dataclass
@@ -187,6 +187,27 @@ def predict(tree: DecisionTree, X: np.ndarray) -> np.ndarray:
         nxt = np.where(go_left, tree.left[node], tree.right[node])
         node = np.where(is_internal, nxt, node)
     return tree.value[node].astype(np.int32)
+
+
+def tree_leaf_ids(tree: DecisionTree) -> np.ndarray:
+    """Leaf node ids in the same left-to-right DFS order as ``tree_paths``.
+
+    Row ``r`` of the reduced rule table (and hence of the encoded LUT)
+    corresponds to leaf node ``tree_leaf_ids(tree)[r]`` — the hook that lets
+    per-leaf side tables (e.g. ensemble class-probability storage in
+    ``repro.forest``) be aligned with TCAM rows.
+    """
+    out: list[int] = []
+
+    def rec(i: int) -> None:
+        if tree.feature[i] < 0:
+            out.append(i)
+            return
+        rec(int(tree.left[i]))
+        rec(int(tree.right[i]))
+
+    rec(0)
+    return np.asarray(out, dtype=np.int64)
 
 
 def tree_paths(tree: DecisionTree) -> list[tuple[list[tuple[int, str, float]], int]]:

@@ -7,7 +7,6 @@ whole framework is one call from raw data.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import numpy as np
@@ -21,40 +20,45 @@ from .reduce import RuleTable, reduce_tree
 from .simulate import SimResult, simulate
 from .synth import TCAMLayout, synthesize
 
-__all__ = ["CompiledDT", "compile_tree", "DT2CAM"]
+__all__ = [
+    "CompiledDT", "compile_tree", "DT2CAM", "FeatureMismatch",
+    "check_feature_count",
+]
 
 BACKENDS = ("sim", "jax")
 
+# flat non-ideality keywords removed from DT2CAM.infer (shim expired)
+_REMOVED_INFER_KWARGS = ("p_sa0", "p_sa1", "sa_sigma", "sigma_in")
 
-def _resolve_nonideal(
-    nonideal: Optional[NonIdealSpec],
-    p_sa0: Optional[float],
-    p_sa1: Optional[float],
-    sa_sigma: Optional[float],
-    sigma_in: Optional[float],
-) -> NonIdealSpec:
-    """Merge the new ``nonideal=NonIdealSpec(...)`` argument with the
-    deprecated flat keywords (one-release shim)."""
-    legacy = {
-        k: v
-        for k, v in dict(p_sa0=p_sa0, p_sa1=p_sa1, sa_sigma=sa_sigma,
-                         sigma_in=sigma_in).items()
-        if v is not None
-    }
-    if legacy:
-        warnings.warn(
-            f"DT2CAM.infer({', '.join(sorted(legacy))}=...) keywords are "
-            "deprecated; pass nonideal=NonIdealSpec(...) instead",
-            DeprecationWarning,
-            stacklevel=3,
+
+class FeatureMismatch(ValueError):
+    """Input feature count does not match the compiled model's.
+
+    Raised by the inference entry points (``DT2CAM.infer``,
+    ``TCAMServer.submit``, the forest executors) *before* encoding, so a
+    wrong-width input fails with a clear message instead of a shape
+    broadcast error deep inside ``pad_inputs``.
+    """
+
+
+def check_feature_count(X: np.ndarray, n_features: int, *,
+                        who: str = "infer") -> np.ndarray:
+    """Validate a (batch, features) matrix against the model's feature count.
+
+    Returns ``X`` as a float64 2-D array; raises :class:`FeatureMismatch` on
+    a width mismatch and ``ValueError`` on a non-2-D input.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    if X.ndim != 2:
+        raise ValueError(
+            f"{who} expects a 2-D (batch, features) array, got shape {X.shape}"
         )
-        if nonideal is not None:
-            raise TypeError(
-                "pass either nonideal=NonIdealSpec(...) or the deprecated "
-                "flat keywords, not both"
-            )
-        return NonIdealSpec(**legacy)
-    return nonideal if nonideal is not None else IDEAL
+    if X.shape[1] != n_features:
+        raise FeatureMismatch(
+            f"{who}: input has {X.shape[1]} features but the compiled model "
+            f"expects {n_features}"
+        )
+    return X
 
 
 @dataclasses.dataclass
@@ -134,11 +138,7 @@ class DT2CAM:
         selective_precharge: bool = True,
         rng: Optional[np.random.Generator] = None,
         interpret: Optional[bool] = None,
-        # deprecated flat non-ideality keywords (one-release shim):
-        p_sa0: Optional[float] = None,
-        p_sa1: Optional[float] = None,
-        sa_sigma: Optional[float] = None,
-        sigma_in: Optional[float] = None,
+        **removed,
     ) -> SimResult:
         """Run hardware-functional inference and return a ``SimResult``.
 
@@ -151,12 +151,27 @@ class DT2CAM:
         engine / interpret only apply to backend='jax' ('auto' picks the
         bit-packed kernel when legal, else the MXU bitplane kernel).
         """
+        if removed:
+            gone = sorted(set(removed) & set(_REMOVED_INFER_KWARGS))
+            if gone:
+                raise TypeError(
+                    f"DT2CAM.infer({', '.join(k + '=...' for k in gone)}) was "
+                    "removed; pass nonideal=NonIdealSpec("
+                    f"{', '.join(k + '=...' for k in gone)}) instead"
+                )
+            raise TypeError(
+                "DT2CAM.infer() got unexpected keyword argument(s): "
+                + ", ".join(sorted(removed))
+            )
         assert self.compiled is not None, "call fit() first"
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; expected one of {BACKENDS}"
             )
-        spec = _resolve_nonideal(nonideal, p_sa0, p_sa1, sa_sigma, sigma_in)
+        X = check_feature_count(
+            X, self.compiled.tree.n_features, who="DT2CAM.infer"
+        )
+        spec = nonideal if nonideal is not None else IDEAL
         rng = rng or np.random.default_rng(self.seed)
         layout = self.compiled.layout
         if spec.has_saf:

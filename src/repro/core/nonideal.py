@@ -22,7 +22,6 @@ convenience wrapper (sample + apply).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import numpy as np
@@ -39,9 +38,9 @@ __all__ = [
 class NonIdealSpec:
     """One object grouping the paper's three non-ideality mechanisms.
 
-    Replaces the sprawling ``p_sa0/p_sa1/sa_sigma/sigma_in`` keyword lists on
-    the inference entry points (``DT2CAM.infer`` keeps backward-compatible
-    keyword shims for one release).
+    Replaces the sprawling ``p_sa0/p_sa1/sa_sigma/sigma_in`` keyword lists
+    that the inference entry points used to take (the flat keywords on
+    ``DT2CAM.infer`` were removed after their one-release deprecation).
 
     p_sa0 / p_sa1: per-resistive-element stuck-at-HRS / stuck-at-LRS fault
         probabilities (Table I).
@@ -169,14 +168,12 @@ def _require_rng(rng: Optional[np.random.Generator],
                  fn_name: str) -> np.random.Generator:
     if rng is not None:
         return rng
-    warnings.warn(
-        f"{fn_name}() without an explicit rng is deprecated — the silent "
-        "default_rng(0) makes every fault sweep draw the same chip; pass a "
-        "np.random.Generator (this shim will be removed next release)",
-        DeprecationWarning,
-        stacklevel=3,
+    # The old silent default_rng(0) fallback made every fault sweep draw the
+    # same chip; the one-release deprecation shim has expired.
+    raise TypeError(
+        f"{fn_name}() requires an explicit rng=np.random.default_rng(seed) "
+        "argument (the silent default_rng(0) fallback was removed)"
     )
-    return np.random.default_rng(0)
 
 
 def apply_saf(
@@ -191,9 +188,9 @@ def apply_saf(
     the ``SAFMask`` instead when the chip needs to be written again later
     (spare-row repair).
 
-    .. deprecated:: 0.7
-       Calling without an explicit ``rng`` warns and falls back to
-       ``default_rng(0)``; the fallback will be removed next release.
+    .. versionchanged:: 0.8
+       ``rng`` is required whenever faults are actually drawn; the silent
+       ``default_rng(0)`` fallback was removed.
     """
     cells = np.asarray(cells)
     if p_sa0 == 0.0 and p_sa1 == 0.0:
@@ -209,9 +206,9 @@ def noisy_inputs(
 ) -> np.ndarray:
     """Add input-encoding noise to (normalized) features (paper: σ_in sweep).
 
-    .. deprecated:: 0.7
-       Calling without an explicit ``rng`` warns and falls back to
-       ``default_rng(0)``; the fallback will be removed next release.
+    .. versionchanged:: 0.8
+       ``rng`` is required whenever noise is actually drawn; the silent
+       ``default_rng(0)`` fallback was removed.
     """
     if sigma_in <= 0:
         return np.asarray(X, dtype=np.float64)

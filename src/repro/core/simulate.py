@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Iterator, Optional
 
 import numpy as np
@@ -51,22 +50,15 @@ class SimResult:
     def accuracy(self, labels: np.ndarray) -> float:
         return float((self.predictions == np.asarray(labels)).mean())
 
-    # -- one-release compatibility shim ------------------------------------
-    # ``kernels.tcam_infer`` used to return the bare 5-tuple
-    # (predictions, survivors, n_survivors, active_evals, energy_per_dec);
-    # it now returns a SimResult.  Iterating keeps old unpacking call sites
-    # working while they migrate; it will be removed next release.
-    def __iter__(self) -> Iterator[np.ndarray]:
-        warnings.warn(
-            "tuple-unpacking a SimResult is deprecated; use the named fields "
+    # ``kernels.tcam_infer`` once returned a bare 5-tuple and SimResult kept
+    # a one-release tuple-unpacking shim; the shim has expired.  Keeping the
+    # method (raising) turns old unpacking call sites into an actionable
+    # error instead of a generic "cannot unpack non-iterable" TypeError.
+    def __iter__(self) -> "Iterator[np.ndarray]":
+        raise TypeError(
+            "tuple-unpacking a SimResult was removed; use the named fields "
             "(.predictions, .survivors, .n_survivors, .active_evals, "
-            ".energy_per_dec) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return iter(
-            (self.predictions, self.survivors, self.n_survivors,
-             self.active_evals, self.energy_per_dec)
+            ".energy_per_dec) instead"
         )
 
 

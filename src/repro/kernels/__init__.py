@@ -8,7 +8,9 @@ analog-ReCAM -> TPU mapping.
   ops.py         — engine selection, padding, SA-variability lowering,
                    jit'd serving path
   ref.py         — pure-jnp oracles both kernels are validated against
+  banked.py      — multi-bank (ensemble) batched/vmapped match
 """
+from .banked import BANKED_ENGINES, tcam_match_banked, tcam_match_banked_ref
 from .ops import (ENGINES, default_interpret, finalize_result, sa_kmax,
                   select_engine, tcam_infer, tcam_match)
 from .ref import pack_bits, tcam_match_packed_ref, tcam_match_ref
@@ -20,4 +22,5 @@ __all__ = [
     "select_engine", "tcam_infer", "tcam_match",
     "pack_bits", "tcam_match_packed_ref", "tcam_match_ref",
     "tcam_match_pallas", "tcam_match_packed_pallas",
+    "BANKED_ENGINES", "tcam_match_banked", "tcam_match_banked_ref",
 ]

@@ -220,11 +220,10 @@ def tcam_infer(
     identical to ``core.simulate.simulate`` (tested bit-exact) but runs the
     match on the Pallas kernels.
 
-    .. deprecated:: 0.6
-       This used to return the bare 5-tuple (predictions, survivors,
-       n_survivors, active_evals, energy_per_dec); tuple-unpacking the
-       returned ``SimResult`` still works for one release (with a
-       DeprecationWarning) via ``SimResult.__iter__``.
+    .. versionchanged:: 0.8
+       This once returned a bare 5-tuple and the returned ``SimResult`` kept
+       a one-release tuple-unpacking shim; the shim has expired — use the
+       named fields.
     """
     xpad = jnp.asarray(layout.pad_inputs(np.asarray(xbits, np.uint8)))
     km = None if kmax is None else jnp.asarray(kmax)

@@ -19,6 +19,11 @@ kernels, reachable from one line:
   errors.py   — typed serving failures (Rejected / DeadlineExceeded /
                 ComputeFailed); every Future resolves with one or a result
 
+``TCAMServer`` also serves multi-bank forests: constructed with a
+``repro.forest.CompiledForest`` it shards each batch across TCAM banks
+(pipelined batched kernels, per-bank BIST/repair, ensemble vote
+aggregation) behind the exact same submit/serve/metrics API.
+
 Fault tolerance across chips (majority voting) lives in
 ``repro.reliability.ReplicatedServer``.
 """

@@ -29,6 +29,15 @@ the budget), and a periodic canary that trips a circuit breaker driving the
 degradation ladder degraded -> repair -> re-vote -> engine fallback to
 'ref'.  Every submitted Future resolves — with a result or a typed error.
 
+Forest mode: constructed with a ``repro.forest.CompiledForest`` the server
+shards the batch path across TCAM banks — per-group batched kernels
+(``kernels.banked``) pipelined via jax async dispatch, per-bank survivors
+aggregated into one ensemble vote per request.  Chip health runs bank by
+bank: BIST and spare-row repair per bank, survivors on remapped spare rows
+translated through a physical->LUT row map back to the right vote entries,
+and a bank whose repair stays degraded is disabled (drops out of the vote
+and the divisor) instead of poisoning the ensemble.
+
 Run ``background=True`` (default) for a worker thread + Future-based
 completion, or ``background=False`` for deterministic single-threaded tests
 via ``pump()``/``drain()``.
@@ -36,20 +45,21 @@ via ``pump()``/``drain()``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import threading
 import time
 import warnings
 from concurrent.futures import Future
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.compiler import CompiledDT
+from ..core.compiler import CompiledDT, FeatureMismatch
 from ..core.encode import encode_inputs
-from ..core.energy import DEFAULT_HW, HardwareParams, f_max
+from ..core.energy import DEFAULT_HW, HardwareParams, f_max, forest_figures
 from ..core.lut import CELL_1, CELL_X
 from ..core.nonideal import (
     IDEAL,
@@ -58,6 +68,7 @@ from ..core.nonideal import (
     apply_saf_mask,
     sample_saf,
 )
+from ..kernels.banked import tcam_match_banked
 from ..kernels.ops import _finalize, sa_kmax, select_engine, tcam_match
 from ..reliability.bist import BistReport, run_bist
 from ..reliability.canary import CanaryProbe, CircuitBreaker, make_canary
@@ -131,7 +142,7 @@ class TCAMServer:
 
     def __init__(
         self,
-        compiled: CompiledDT,
+        compiled: Union[CompiledDT, "CompiledForest"],
         *,
         hw: HardwareParams = DEFAULT_HW,
         nonideal: NonIdealSpec = IDEAL,
@@ -139,41 +150,20 @@ class TCAMServer:
         rng: Optional[np.random.Generator] = None,
         clock: Callable[[], float] = time.perf_counter,
     ) -> None:
-        self._lut = compiled.lut
         self._hw = hw
         self._config = config
         self._spec = nonideal
         self._clock = clock
         self._rng = rng or np.random.default_rng(0)
-
-        # -- chip-static non-idealities: sampled once per server ----------
-        # The SAF mask is the chip's *persistent* stuck-element state — kept
-        # so repair can write new row content through the same stuck cells.
-        layout = compiled.layout
-        self._intent = np.array(layout.cells, copy=True)  # programmed content
-        self._saf_mask: Optional[SAFMask] = None
-        if nonideal.has_saf:
-            self._saf_mask = sample_saf(
-                self._intent.shape, nonideal.p_sa0, nonideal.p_sa1, self._rng
-            )
-            faulted = apply_saf_mask(self._intent, self._saf_mask)
-            # padding columns beyond decoder+LUT width are OFF-OFF (masked,
-            # physically disconnected) — stuck elements there cannot reach
-            # the match line, so the served grid keeps them don't-care
-            faulted[:, 1 + layout.width:] = CELL_X
-            layout = dataclasses.replace(layout, cells=faulted)
-        self._layout = layout
-        self._ideal_cells = np.array(compiled.layout.cells, copy=True)
-        self._kmax: Optional[np.ndarray] = None
-        if nonideal.sa_sigma > 0:
-            offsets = self._rng.normal(
-                0.0, nonideal.sa_sigma,
-                size=(layout.cells.shape[0], layout.n_cwd),
-            )
-            self._kmax = sa_kmax(layout, offsets, hw)
-
         self.metrics_store = ServeMetrics()
-        self.engine = self._resolve_engine(config.engine)
+
+        # multi-bank (forest) mode: a CompiledForest shards the serving path
+        # across banks (duck-typed to keep repro.forest an optional import)
+        self._forest = compiled if hasattr(compiled, "banks") else None
+        if self._forest is not None:
+            self._init_forest_state(nonideal)
+        else:
+            self._init_single_state(compiled, nonideal)
 
         self.policy = BucketPolicy(
             max_batch=config.max_batch, min_bucket=config.min_bucket
@@ -184,7 +174,9 @@ class TCAMServer:
         self.breaker = CircuitBreaker(threshold=config.canary_threshold)
         self._canary: Optional[CanaryProbe] = None
         n_canary = min(config.canary_size, config.max_batch)
-        if n_canary > 0:
+        if n_canary > 0 and self._forest is None:
+            # forest mode has no single golden layout: bank health is
+            # covered by per-bank BIST/repair instead of the canary
             self._canary = make_canary(compiled.layout, n_canary, self._rng)
         self._batches_since_canary = 0
         self._repair_reports: list[RepairReport] = []
@@ -207,13 +199,128 @@ class TCAMServer:
             )
             self._thread.start()
 
+    # -- per-mode chip state ------------------------------------------------
+    def _init_single_state(self, compiled: CompiledDT,
+                           nonideal: NonIdealSpec) -> None:
+        """Single-model mode: one logical chip, sampled faults applied once.
+
+        The SAF mask is the chip's *persistent* stuck-element state — kept
+        so repair can write new row content through the same stuck cells.
+        """
+        self._lut = compiled.lut
+        self._n_features = compiled.tree.n_features
+        layout = compiled.layout
+        self._intent = np.array(layout.cells, copy=True)  # programmed content
+        self._saf_mask: Optional[SAFMask] = None
+        if nonideal.has_saf:
+            self._saf_mask = sample_saf(
+                self._intent.shape, nonideal.p_sa0, nonideal.p_sa1, self._rng
+            )
+            faulted = apply_saf_mask(self._intent, self._saf_mask)
+            # padding columns beyond decoder+LUT width are OFF-OFF (masked,
+            # physically disconnected) — stuck elements there cannot reach
+            # the match line, so the served grid keeps them don't-care
+            faulted[:, 1 + layout.width:] = CELL_X
+            layout = dataclasses.replace(layout, cells=faulted)
+        self._layout = layout
+        self._ideal_cells = np.array(compiled.layout.cells, copy=True)
+        self._kmax: Optional[np.ndarray] = None
+        if nonideal.sa_sigma > 0:
+            offsets = self._rng.normal(
+                0.0, nonideal.sa_sigma,
+                size=(layout.cells.shape[0], layout.n_cwd),
+            )
+            self._kmax = sa_kmax(layout, offsets, self._hw)
+        self.engine = self._resolve_engine(self._config.engine)
+
+    def _init_forest_state(self, nonideal: NonIdealSpec) -> None:
+        """Forest mode: every bank is its own physical array with its own
+        sampled stuck-fault mask and SA offsets; a defective bank degrades
+        the ensemble vote instead of taking down the chip."""
+        forest = self._forest
+        self._n_features = forest.n_features
+        n = forest.n_banks
+        self._f_intent = [np.array(b.layout.cells, copy=True)
+                          for b in forest.banks]
+        self._f_masks: list[Optional[SAFMask]] = [None] * n
+        self._f_layouts = []
+        for i, bank in enumerate(forest.banks):
+            lay = bank.layout
+            if nonideal.has_saf:
+                mask = sample_saf(
+                    self._f_intent[i].shape,
+                    nonideal.p_sa0, nonideal.p_sa1, self._rng,
+                )
+                self._f_masks[i] = mask
+                faulted = apply_saf_mask(self._f_intent[i], mask)
+                faulted[:, 1 + lay.width:] = CELL_X
+                lay = dataclasses.replace(lay, cells=faulted)
+            self._f_layouts.append(lay)
+        self._f_kmax_banks: list[Optional[np.ndarray]] = [None] * n
+        if nonideal.sa_sigma > 0:
+            for i, lay in enumerate(self._f_layouts):
+                offsets = self._rng.normal(
+                    0.0, nonideal.sa_sigma,
+                    size=(lay.cells.shape[0], lay.n_cwd),
+                )
+                self._f_kmax_banks[i] = sa_kmax(lay, offsets, self._hw)
+        self._f_enabled = np.ones(n, dtype=bool)
+        # physical row -> LUT (vote-table) row; spares start unassigned and
+        # inherit a LUT row when repair remaps a defective rule onto them
+        self._f_row_map = []
+        for lay in self._f_layouts:
+            rm = np.full(lay.cells.shape[0], -1, dtype=np.int32)
+            rm[: lay.n_rows] = np.arange(lay.n_rows, dtype=np.int32)
+            self._f_row_map.append(rm)
+        self._rebuild_plan()
+        self.engine = self._resolve_forest_engine(self._config.engine)
+
+    def _rebuild_plan(self) -> None:
+        """(Re)shard the served (possibly faulted/repaired) bank layouts and
+        splice each bank's SA-variability kmax into its group slot."""
+        from ..forest.plan import plan_forest
+
+        self._f_plan = plan_forest(self._f_layouts)
+        self._f_group_kmax = []
+        for grp in self._f_plan.groups:
+            km = np.array(grp.kmax0, copy=True)
+            for slot, bank_id in enumerate(grp.bank_ids):
+                k = self._f_kmax_banks[int(bank_id)]
+                if k is not None:
+                    km[slot, : k.shape[0], : k.shape[1]] = k
+            self._f_group_kmax.append(km)
+
     # -- engine & compile machinery ---------------------------------------
     def _layout_id(self) -> str:
+        if self._forest is not None:
+            return "forest-" + self._f_plan.plan_id
         return hashlib.sha1(
             self._layout.cells.tobytes()
             + self._layout.classes.tobytes()
             + bytes([self._layout.s % 251])
         ).hexdigest()[:12]
+
+    def _resolve_forest_engine(self, requested: str) -> str:
+        """Forest engines: 'banked' (batched einsum), 'mxu' (vmapped Pallas),
+        'ref' (oracle).  'auto' means 'banked'; 'packed' is unrepresentable
+        for stacked banks and falls back with a warning."""
+        if requested == "auto":
+            return "banked"
+        if requested in ("banked", "mxu", "ref"):
+            return requested
+        if requested == "packed":
+            warnings.warn(
+                "engine 'packed' is not available in forest mode; "
+                "falling back to 'banked'",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+            self.metrics_store.on_fallback()
+            return "banked"
+        raise ValueError(
+            f"unknown forest engine {requested!r}; expected 'auto', "
+            "'banked', 'mxu' or 'ref'"
+        )
 
     def _resolve_engine(self, requested: str) -> str:
         try:
@@ -233,7 +340,10 @@ class TCAMServer:
 
     def _build(self, bucket: int, engine: str):
         """One jit'd batch function per (bucket, engine): (bucket, W) padded
-        search words -> (preds, survivors, n_survivors, active_evals)."""
+        search words -> (preds, survivors, n_survivors, active_evals).
+        Forest mode builds one jit'd banked match per plan group instead."""
+        if self._forest is not None:
+            return self._build_forest(bucket, engine)
         layout, kmax = self._layout, self._kmax
         interpret = self._config.interpret
         classes = jnp.asarray(layout.classes)
@@ -249,11 +359,32 @@ class TCAMServer:
 
         return run
 
+    def _build_forest(self, bucket: int, engine: str):
+        """Forest compute for one (bucket, engine): a list of jit'd banked
+        match functions, one per plan group — each evaluates its whole stack
+        of banks in a single kernel invocation."""
+        interpret = self._config.interpret
+        fns = []
+        for grp, km in zip(self._f_plan.groups, self._f_group_kmax):
+            run = functools.partial(
+                tcam_match_banked, grp.cells, s=grp.s,
+                kmax=jnp.asarray(km), engine=engine, interpret=interpret,
+            )
+            fns.append(jax.jit(lambda xpad, run=run: run(xpad)))
+        return fns
+
     def warmup(self) -> int:
         """Pre-compile every bucket shape for the resolved engine so no
         request ever pays the trace+compile cost; returns #compiles."""
         before = self.cache.misses
         for b in self.policy.buckets:
+            if self._forest is not None:
+                fns = self.cache.get(b, self.engine)
+                for grp, fn in zip(self._f_plan.groups, fns):
+                    jax.block_until_ready(fn(
+                        jnp.zeros((grp.n_banks, b, grp.width), jnp.uint8)
+                    ))
+                continue
             fn = self.cache.get(b, self.engine)
             w = self._layout.n_cwd * self._layout.s
             jax.block_until_ready(fn(jnp.zeros((b, w), jnp.uint8)))
@@ -266,12 +397,23 @@ class TCAMServer:
         serving error (``Rejected`` on admission-control shedding,
         ``DeadlineExceeded`` on queue expiry, ``ComputeFailed`` after the
         retry budget)."""
+        x = np.asarray(x, np.float64)
+        if x.ndim != 1:
+            raise ValueError(
+                "TCAMServer.submit expects a 1-D feature vector, got shape "
+                f"{x.shape}"
+            )
+        if x.shape[0] != self._n_features:
+            raise FeatureMismatch(
+                f"TCAMServer.submit: input has {x.shape[0]} features but the "
+                f"served model expects {self._n_features}"
+            )
         fut: Future = Future()
         now = self._clock()
         deadline = None
         if self._config.request_timeout_s is not None:
             deadline = now + self._config.request_timeout_s
-        req = _Request(np.asarray(x, np.float64), fut, deadline)
+        req = _Request(x, fut, deadline)
         with self._cond:
             if self._closed:
                 raise RuntimeError("server is closed")
@@ -414,6 +556,9 @@ class TCAMServer:
         self._maybe_canary()
 
     def _process_inner(self, batch: list, deadline_flush: bool) -> None:
+        if self._forest is not None:
+            self._process_inner_forest(batch, deadline_flush)
+            return
         t_form = self._clock()
         reqs: Sequence[_Request] = [p.item for p in batch]
         queue_lat = np.array([t_form - p.t_enqueue for p in batch])
@@ -467,10 +612,109 @@ class TCAMServer:
             self._outstanding -= n
             self._cond.notify_all()
 
+    def _process_inner_forest(self, batch: list, deadline_flush: bool) -> None:
+        """Forest-mode batch: pipelined per-group compute + vote aggregation.
+
+        Group g+1's host-side input encoding overlaps group g's device
+        compute (JAX async dispatch), then per-bank survivors aggregate into
+        one ensemble vote per request — disabled (defective) banks drop out
+        of both the vote and the divisor."""
+        from ..forest.compiler import aggregate_votes
+        from ..forest.executor import encode_group
+
+        forest = self._forest
+        t_form = self._clock()
+        reqs: Sequence[_Request] = [p.item for p in batch]
+        queue_lat = np.array([t_form - p.t_enqueue for p in batch])
+        n = len(reqs)
+        bucket = self.policy.bucket_for(n)
+
+        X = np.stack([r.x for r in reqs])
+        if self.compute_fault_hook is not None:
+            self.compute_fault_hook(X)
+        if self._spec.sigma_in > 0:
+            X = X + self._rng.normal(0.0, self._spec.sigma_in, size=X.shape)
+        Xp = forest.prepare_inputs(X, who="TCAMServer")
+
+        fns = self.cache.get(bucket, self.engine)
+        pending = []
+        for grp, fn in zip(self._f_plan.groups, fns):
+            xpad = encode_group(forest, grp, Xp)
+            if bucket > n:
+                xpad = np.pad(xpad, ((0, 0), (0, bucket - n), (0, 0)))
+            pending.append((grp, fn(jnp.asarray(xpad))))
+
+        survivors = np.empty((forest.n_banks, n), np.int32)
+        n_survivors = np.empty((forest.n_banks, n), np.int32)
+        active = np.empty((forest.n_banks, n), np.int64)
+        for grp, out in pending:
+            jax.block_until_ready(out)
+            survive, evals = (np.asarray(o) for o in out)
+            for slot, bank_id in enumerate(grp.bank_ids):
+                i = int(bank_id)
+                rows_i = int(grp.rows[slot])
+                sv = survive[slot, :n, :rows_i]
+                ns = sv.sum(axis=1).astype(np.int32)
+                first = np.argmax(sv, axis=1).astype(np.int32)
+                # translate physical rows (spares after repair) to LUT rows
+                rm = self._f_row_map[i]
+                survivors[i] = np.where(ns > 0, rm[first], -1)
+                n_survivors[i] = ns
+                ev = np.minimum(evals[slot, :n, :rows_i],
+                                int(grp.d_real[slot]))
+                active[i] = ev.sum(axis=1).astype(np.int64)
+        compute_s = self._clock() - t_form
+
+        predictions, _score = aggregate_votes(
+            forest, survivors, self._f_enabled
+        )
+        enabled = self._f_enabled
+        n_voting = int(enabled.sum())
+        active_total = active[enabled].sum(axis=0)
+        energy = (active_total.astype(np.float64) * self._hw.e_row
+                  + n_voting * self._hw.e_mem)
+
+        self.metrics_store.on_batch(
+            n, bucket,
+            deadline_flush=deadline_flush,
+            energy_j=float(energy.sum()),
+            active_evals=int(active_total.sum()),
+        )
+        self.metrics_store.queue.record_many(queue_lat)
+        self.metrics_store.compute.record(compute_s)
+        self.metrics_store.total.record_many(queue_lat + compute_s)
+
+        for i, req in enumerate(reqs):
+            pred = predictions[i]
+            req.future.set_result(
+                RequestResult(
+                    prediction=(int(pred) if np.issubdtype(
+                        np.asarray(pred).dtype, np.integer) else pred),
+                    survivor=-1,   # ensemble decision: no single row
+                    n_survivors=int((n_survivors[enabled, i] > 0).sum()),
+                    active_evals=int(active_total[i]),
+                    energy_j=float(energy[i]),
+                    queue_s=float(queue_lat[i]),
+                    compute_s=compute_s,
+                    bucket=bucket,
+                    engine=self.engine,
+                )
+            )
+        with self._cond:
+            self._outstanding -= n
+            self._cond.notify_all()
+
     # -- chip health: BIST, repair, canary, breaker ------------------------
-    def self_test(self) -> BistReport:
+    def self_test(self):
         """March-style BIST: probe every physical row of the (possibly
-        faulty) array against its programmed intent; per-row defect map."""
+        faulty) array against its programmed intent; per-row defect map.
+        Forest mode returns one ``BistReport`` per bank."""
+        if self._forest is not None:
+            return [
+                run_bist(lay.cells, intent,
+                         used=1 + lay.width, n_rows=lay.n_rows)
+                for lay, intent in zip(self._f_layouts, self._f_intent)
+            ]
         return run_bist(
             self._layout.cells, self._intent,
             used=1 + self._layout.width, n_rows=self._layout.n_rows,
@@ -478,12 +722,19 @@ class TCAMServer:
 
     def repair(
         self,
-        defects: Optional[BistReport] = None,
+        defects=None,
         priority: Optional[np.ndarray] = None,
-    ) -> RepairReport:
+    ):
         """Spare-row repair: remap BIST-flagged rows onto write-verified
         spares, rebuild the compile cache, and report graceful degradation
-        (``report.degraded`` when spares ran out or ghosts remain)."""
+        (``report.degraded`` when spares ran out or ghosts remain).
+
+        Forest mode repairs bank by bank (``defects`` is the per-bank
+        ``self_test()`` list) and returns one ``RepairReport`` per repaired
+        bank; a bank whose repair stays degraded is *disabled* — it drops
+        out of the ensemble vote instead of poisoning it."""
+        if self._forest is not None:
+            return self._repair_forest(defects)
         if self._saf_mask is None:
             raise RuntimeError(
                 "repair requires a chip with sampled stuck-at faults "
@@ -501,9 +752,56 @@ class TCAMServer:
         self._rebuild_compute()
         return report
 
+    def _repair_forest(self, defects) -> list:
+        if not any(m is not None for m in self._f_masks):
+            raise RuntimeError(
+                "repair requires a chip with sampled stuck-at faults "
+                "(NonIdealSpec.has_saf)"
+            )
+        if defects is None:
+            defects = self.self_test()
+        reports = []
+        for i, bist in enumerate(defects):
+            if bist.defective_rows.size == 0 or self._f_masks[i] is None:
+                continue
+            new_layout, new_intent, report = repair_layout(
+                self._f_layouts[i], self._f_intent[i], self._f_masks[i],
+                bist.defective_rows,
+            )
+            self._f_layouts[i] = new_layout
+            self._f_intent[i] = new_intent
+            # spare rows inherit the LUT row they now carry, so post-repair
+            # survivors (physical spare indices) resolve in vote-table space
+            rm = self._f_row_map[i]
+            for orig, spare in report.assignments.items():
+                rm[int(spare)] = rm[int(orig)]
+            reports.append(report)
+            self.metrics_store.on_repair(report.rows_repaired)
+            if report.degraded:
+                self._f_enabled[i] = False
+        self._repair_reports.extend(reports)
+        self._rebuild_compute()
+        return reports
+
+    def disable_bank(self, bank: int) -> None:
+        """Drop one bank out of the ensemble vote (degraded operation)."""
+        if self._forest is None:
+            raise RuntimeError("disable_bank is only valid in forest mode")
+        mask = self._f_enabled.copy()
+        mask[int(bank)] = False
+        if not mask.any():
+            raise RuntimeError("cannot disable the last voting bank")
+        self._f_enabled = mask
+
     def _rebuild_compute(self) -> None:
         """Re-key the compile cache after the layout changed (repair) and
         re-resolve engine legality (repair writes can add/remove CELL_MM)."""
+        if self._forest is not None:
+            if self.engine != "ref":
+                self.engine = self._resolve_forest_engine(self._config.engine)
+            self._rebuild_plan()
+            self.cache = CompileCache(self._build, self._layout_id())
+            return
         if self.engine != "ref":
             self.engine = self._resolve_engine(self._config.engine)
         self.cache = CompileCache(self._build, self._layout_id())
@@ -561,6 +859,28 @@ class TCAMServer:
 
     def health(self) -> dict:
         """Chip-health snapshot: breaker state, canary, spares, repairs."""
+        if self._forest is not None:
+            spares_total = sum(l.n_spares for l in self._f_layouts)
+            spares_free = sum(
+                int((intent[lay.spare_row_indices, 0] == CELL_1).sum())
+                for lay, intent in zip(self._f_layouts, self._f_intent)
+                if lay.n_spares
+            )
+            return {
+                "state": self.breaker.state,
+                "engine": self.engine,
+                "breaker": self.breaker.snapshot(),
+                "mode": "forest",
+                "n_banks": self._forest.n_banks,
+                "banks_enabled": int(self._f_enabled.sum()),
+                "spares_total": spares_total,
+                "spares_free": spares_free,
+                "repair_attempts": len(self._repair_reports),
+                "last_repair": (
+                    self._repair_reports[-1].summary()
+                    if self._repair_reports else None
+                ),
+            }
         spares_free = int(
             (self._intent[self._layout.spare_row_indices, 0] == CELL_1).sum()
         ) if self._layout.n_spares else 0
@@ -588,6 +908,28 @@ class TCAMServer:
     def metrics(self) -> dict:
         """JSON-ready snapshot: serving counters/latency + compile cache +
         chip health + modelled ReCAM hardware figures of merit."""
+        if self._forest is not None:
+            figs = forest_figures(self._f_layouts, self._hw)
+            agg = figs["aggregate"]
+            return self.metrics_store.snapshot(
+                engine=self.engine,
+                buckets=list(self.policy.buckets),
+                jit_cache=self.cache.stats(),
+                health=self.health(),
+                # aggregate = raw per-bank pipelined rates summed; ensemble =
+                # complete forest decisions (all banks' votes needed)
+                modelled_mdecs_pipe=agg["decs_pipe"] / 1e6,
+                modelled_mdecs_ensemble=agg["ensemble_decs_pipe"] / 1e6,
+                forest_figures=figs,
+                layout={
+                    "n_banks": self._f_plan.n_banks,
+                    "groups": [
+                        {"banks": int(g.n_banks), "r_pad": g.r_pad,
+                         "d_pad": g.d_pad, "s": g.s}
+                        for g in self._f_plan.groups
+                    ],
+                },
+            )
         lay, hw = self._layout, self._hw
         fm = f_max(lay.s, hw)
         return self.metrics_store.snapshot(

@@ -1,0 +1,227 @@
+"""Forest compiler + sharded multi-bank execution.
+
+Acceptance (ISSUE): a 25-tree sklearn RandomForest compiled with
+``compile_forest`` must reproduce ``RandomForestClassifier.predict``
+bit-exactly on the numpy ref path, and the jax engines must match per
+engine; a single-tree forest must agree with the single-tree path; the
+modelled aggregate dec/s must grow monotonically with bank count; and
+forest-mode serving must survive per-bank BIST/repair with spare-row
+survivors resolving to the right vote entries.
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+import repro
+from repro.core import DT2CAM, NonIdealSpec
+from repro.dt import load_split
+from repro.forest import (
+    CompiledForest,
+    compile_forest,
+    forest_infer_ref,
+    plan_forest,
+    train_forest,
+)
+
+sklearn = pytest.importorskip("sklearn")
+from sklearn.ensemble import RandomForestClassifier  # noqa: E402
+
+PAPER_DATASETS = ["cancer", "car"]
+
+
+@pytest.fixture(scope="module", params=PAPER_DATASETS)
+def rf_case(request):
+    Xtr, ytr, Xte, yte = load_split(request.param)
+    rf = RandomForestClassifier(
+        n_estimators=25, max_depth=8, random_state=0
+    ).fit(Xtr, ytr)
+    forest = compile_forest(rf, s=128)
+    return request.param, rf, forest, Xte, yte
+
+
+# --------------------------------------------------------------------------
+# sklearn parity: ref path
+# --------------------------------------------------------------------------
+def test_sklearn_forest_parity_ref(rf_case):
+    name, rf, forest, Xte, yte = rf_case
+    assert isinstance(forest, CompiledForest)
+    assert forest.n_banks == 25
+    res = forest_infer_ref(forest, Xte)
+    np.testing.assert_array_equal(res.predictions, rf.predict(Xte))
+    # soft-vote scores match predict_proba up to fp aggregation order
+    np.testing.assert_allclose(res.score, rf.predict_proba(Xte),
+                               rtol=0, atol=1e-12)
+
+
+def test_sklearn_forest_parity_banked_engine(rf_case):
+    name, rf, forest, Xte, yte = rf_case
+    ref = forest_infer_ref(forest, Xte)
+    ex = repro.ForestExecutor(forest, engine="banked")
+    res = ex.infer(Xte)
+    np.testing.assert_array_equal(res.predictions, rf.predict(Xte))
+    np.testing.assert_array_equal(res.survivors, ref.survivors)
+    np.testing.assert_array_equal(res.active_evals, ref.active_evals)
+
+
+def test_sklearn_forest_parity_mxu_engine():
+    # one dataset, small batch: the vmapped Pallas kernel runs in interpret
+    # mode on CPU and is slow
+    Xtr, ytr, Xte, yte = load_split("cancer")
+    rf = RandomForestClassifier(
+        n_estimators=5, max_depth=6, random_state=1
+    ).fit(Xtr, ytr)
+    forest = compile_forest(rf, s=128)
+    Xq = Xte[:32]
+    ref = forest_infer_ref(forest, Xq)
+    res = repro.ForestExecutor(forest, engine="mxu").infer(Xq)
+    np.testing.assert_array_equal(res.predictions, rf.predict(Xq))
+    np.testing.assert_array_equal(res.survivors, ref.survivors)
+    np.testing.assert_array_equal(res.active_evals, ref.active_evals)
+
+
+# --------------------------------------------------------------------------
+# single-tree forest == single-tree path
+# --------------------------------------------------------------------------
+def _single_tree_agrees(seed: int, n: int) -> None:
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 5))
+    y = (X[:, 0] + 0.5 * X[:, 2] > 0).astype(np.int64)
+    model = DT2CAM(s=32, max_depth=6).fit(X, y)
+    forest = compile_forest([model.compiled.tree], s=32)
+    assert forest.n_banks == 1
+    single = model.infer(X)
+    res = forest_infer_ref(forest, X)
+    np.testing.assert_array_equal(res.predictions, single.predictions)
+    np.testing.assert_array_equal(res.survivors[0], single.survivors)
+    np.testing.assert_array_equal(res.active_evals[0], single.active_evals)
+
+
+def test_single_tree_forest_equals_single_tree_deterministic():
+    for seed in (0, 1, 2):
+        _single_tree_agrees(seed, 80)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 9999), n=st.integers(30, 120))
+def test_single_tree_forest_equals_single_tree_property(seed, n):
+    _single_tree_agrees(seed, n)
+
+
+# --------------------------------------------------------------------------
+# plan + figures
+# --------------------------------------------------------------------------
+def test_plan_shapes_and_figures_monotone():
+    Xtr, ytr, _, _ = load_split("cancer")
+    trees = train_forest(Xtr, ytr, n_trees=4, max_depth=8, seed=0)
+    rates = []
+    for n in (1, 2, 4):
+        forest = compile_forest(trees[:n], s=128)
+        plan = plan_forest(forest)
+        assert sorted(
+            int(i) for g in plan.groups for i in g.bank_ids
+        ) == list(range(n))
+        for g in plan.groups:
+            assert g.r_pad % g.s == 0 and (g.r_pad & (g.r_pad - 1)) == 0
+            assert g.cells.shape == (g.n_banks, g.r_pad, g.d_pad * g.s)
+        figs = repro.forest_figures(forest.layouts)
+        assert figs["aggregate"]["n_banks"] == n
+        rates.append(figs["aggregate"]["decs_pipe"])
+    assert rates[0] < rates[1] < rates[2]
+
+
+def test_compile_forest_validation():
+    Xtr, ytr, Xte, _ = load_split("cancer")
+    trees = train_forest(Xtr, ytr, n_trees=2, max_depth=4, seed=0)
+    with pytest.raises(ValueError, match="vote"):
+        compile_forest(trees, s=64, vote="plurality")
+    forest = compile_forest(trees, s=64)
+    with pytest.raises(repro.FeatureMismatch, match="expects"):
+        forest_infer_ref(forest, Xte[:, :-1])
+
+
+# --------------------------------------------------------------------------
+# serving: forest mode, repair, degradation
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served_forest():
+    Xtr, ytr, Xte, yte = load_split("cancer")
+    trees = train_forest(Xtr, ytr, n_trees=6, max_depth=6, seed=0)
+    forest = compile_forest(trees, s=128, spare_rows=4)
+    return forest, Xte
+
+
+def test_forest_serving_matches_ref(served_forest):
+    forest, Xte = served_forest
+    ref = forest_infer_ref(forest, Xte[:48])
+    cfg = repro.ServeConfig(engine="banked", max_batch=16, background=False)
+    srv = repro.TCAMServer(forest, config=cfg)
+    assert srv.warmup() > 0
+    futs = [srv.submit(x) for x in Xte[:48]]
+    srv.drain()
+    preds = np.array([f.result().prediction for f in futs])
+    np.testing.assert_array_equal(preds, ref.predictions)
+    assert srv.health()["mode"] == "forest"
+    m = srv.metrics()
+    assert m["modelled_mdecs_pipe"] > m["modelled_mdecs_ensemble"]
+    with pytest.raises(repro.FeatureMismatch, match="expects"):
+        srv.submit(Xte[0, :-1])
+
+
+def test_forest_repair_keeps_serving(served_forest):
+    """Per-bank BIST + spare-row repair: post-repair survivors land on
+    spare rows, which must resolve through the physical->LUT row map to
+    the original vote entries (not crash or mis-vote)."""
+    forest, Xte = served_forest
+    ref = forest_infer_ref(forest, Xte[:48])
+    cfg = repro.ServeConfig(engine="banked", max_batch=16, background=False)
+    srv = repro.TCAMServer(
+        forest, config=cfg,
+        nonideal=NonIdealSpec(p_sa0=0.01, p_sa1=0.01),
+        rng=np.random.default_rng(11),
+    )
+    bists = srv.self_test()
+    assert len(bists) == forest.n_banks
+    assert sum(b.defective_rows.size for b in bists) > 0
+    reports = srv.repair(bists)
+    assert sum(r.rows_repaired for r in reports) > 0
+    futs = [srv.submit(x) for x in Xte[:48]]
+    srv.drain()
+    preds = np.array([f.result().prediction for f in futs])
+    # the repaired chip votes like the ideal forest on (almost) all inputs;
+    # unrepairable banks drop out of the vote rather than poisoning it
+    assert (preds == ref.predictions).mean() > 0.9
+    health = srv.health()
+    assert health["n_banks"] == forest.n_banks
+    assert 1 <= health["banks_enabled"] <= forest.n_banks
+
+
+def test_disable_bank_degrades_gracefully(served_forest):
+    forest, Xte = served_forest
+    cfg = repro.ServeConfig(engine="banked", max_batch=16, background=False)
+    srv = repro.TCAMServer(forest, config=cfg)
+    enabled = np.ones(forest.n_banks, bool)
+    enabled[0] = False
+    ref = forest_infer_ref(forest, Xte[:32], enabled=enabled)
+    srv.disable_bank(0)
+    futs = [srv.submit(x) for x in Xte[:32]]
+    srv.drain()
+    preds = np.array([f.result().prediction for f in futs])
+    np.testing.assert_array_equal(preds, ref.predictions)
+    for b in range(1, forest.n_banks):
+        if b < forest.n_banks - 1:
+            srv.disable_bank(b)
+    with pytest.raises(RuntimeError, match="last voting bank"):
+        srv.disable_bank(forest.n_banks - 1)
+
+
+# --------------------------------------------------------------------------
+# blessed top-level API
+# --------------------------------------------------------------------------
+def test_top_level_api_resolves():
+    missing = [n for n in repro.__all__ if not hasattr(repro, n)]
+    assert missing == []
+    assert repro.compile_forest is compile_forest
+    assert repro.TCAMServer.__module__.startswith("repro.serve")
+    with pytest.raises(AttributeError):
+        repro.not_a_public_name

@@ -1,15 +1,15 @@
 """Unified inference API: DT2CAM.infer backends, NonIdealSpec, engine
-selection edge cases, and the one-release deprecation shims."""
-import warnings
-
+selection edge cases, input validation, and the expired-shim removal
+errors (every removed shim must fail with an actionable message)."""
 import numpy as np
 import pytest
 
-from repro.core import DT2CAM, IDEAL, NonIdealSpec, TernaryLUT
+from repro.core import (DT2CAM, IDEAL, FeatureMismatch, NonIdealSpec,
+                        TernaryLUT)
 from repro.core.lut import CELL_MM
 from repro.core.synth import synthesize
 from repro.dt import load_split
-from repro.kernels import select_engine, tcam_infer, tcam_match
+from repro.kernels import select_engine, tcam_match
 
 PAPER_DATASETS = ["iris", "cancer", "car"]
 
@@ -127,33 +127,42 @@ def test_kmax_minus_one_forces_mismatch():
 
 
 # --------------------------------------------------------------------------
-# deprecation shims
+# expired shims: every removed path raises an actionable, typed error
 # --------------------------------------------------------------------------
-def test_flat_nonideality_keywords_warn_and_still_work():
+def test_flat_nonideality_keywords_removed():
     m, Xte, _ = _fitted("iris", s=16)
-    with pytest.warns(DeprecationWarning, match="NonIdealSpec"):
-        legacy = m.infer(Xte, sigma_in=0.02, rng=np.random.default_rng(3))
-    new = m.infer(Xte, nonideal=NonIdealSpec(sigma_in=0.02),
+    with pytest.raises(TypeError, match=r"removed.*NonIdealSpec"):
+        m.infer(Xte, sigma_in=0.02, rng=np.random.default_rng(3))
+    with pytest.raises(TypeError, match=r"p_sa0.*removed"):
+        m.infer(Xte, p_sa0=0.1)
+    # unknown kwargs still get the plain unexpected-keyword error
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        m.infer(Xte, banana=1)
+    # spec path unaffected
+    res = m.infer(Xte, nonideal=NonIdealSpec(sigma_in=0.02),
                   rng=np.random.default_rng(3))
-    np.testing.assert_array_equal(legacy.predictions, new.predictions)
+    assert res.predictions.shape == (len(Xte),)
 
 
-def test_flat_keywords_and_spec_together_rejected():
+def test_sim_result_tuple_unpacking_removed():
     m, Xte, _ = _fitted("iris", s=16)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(TypeError, match="not both"):
-            m.infer(Xte, nonideal=IDEAL, p_sa0=0.1)
+    res = m.infer(Xte)
+    with pytest.raises(TypeError, match="named fields"):
+        preds, *_ = res
+    with pytest.raises(TypeError, match="named fields"):
+        iter(res)
 
 
-def test_tcam_infer_tuple_unpacking_shim():
+# --------------------------------------------------------------------------
+# input validation
+# --------------------------------------------------------------------------
+def test_infer_feature_mismatch_typed_error():
     m, Xte, _ = _fitted("iris", s=16)
-    from repro.core.encode import encode_inputs
-    xb = encode_inputs(m.compiled.lut, Xte)
-    res = m.infer(Xte, backend="jax")
-    with pytest.warns(DeprecationWarning, match="tuple-unpacking"):
-        preds, surv, nsurv, act, en = tcam_infer(m.compiled.layout, xb)
-    np.testing.assert_array_equal(preds, res.predictions)
-    np.testing.assert_array_equal(en, res.energy_per_dec)
+    with pytest.raises(FeatureMismatch, match="expects 4"):
+        m.infer(Xte[:, :3])
+    with pytest.raises(ValueError, match="2-D"):
+        m.infer(Xte[0])
+    assert issubclass(FeatureMismatch, ValueError)
 
 
 def test_nonideal_spec_validation():

@@ -62,13 +62,16 @@ def test_saf_tie_break_is_50_50():
     assert not (mask.sa0_r2 & mask.sa1_r2).any()
 
 
-def test_saf_missing_rng_deprecated():
+def test_saf_missing_rng_removed():
+    """The silent default_rng(0) fallback expired: a non-trivial draw with
+    no rng is a TypeError naming the fix; zero-probability shortcuts and
+    explicit-rng calls never needed randomness and must stay working."""
     cells = np.full((16, 16), CELL_0, np.int8)
-    with pytest.warns(DeprecationWarning, match="apply_saf"):
+    with pytest.raises(TypeError, match=r"apply_saf\(\) requires an explicit"):
         apply_saf(cells, 0.5, 0.0)
-    with pytest.warns(DeprecationWarning, match="noisy_inputs"):
+    with pytest.raises(TypeError,
+                       match=r"noisy_inputs\(\) requires an explicit"):
         noisy_inputs(np.zeros((4, 4)), 0.1)
-    # explicit rng and the zero-probability shortcuts must stay silent
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         apply_saf(cells, 0.5, 0.0, np.random.default_rng(0))
