@@ -11,7 +11,7 @@ Two experiment families, emitted as one JSON report (CI artifact):
      * k-chip majority voting (``ReplicatedServer``) accuracy and the
        observed disagreement rate.
 2. **Serving chaos** — a live ``TCAMServer`` under injected *compute*
-   faults (via ``compute_fault_hook``), a bounded queue, and per-request
+   faults (via ``fault_injection_hook``), a bounded queue, and per-request
    deadlines.  The invariant under test: the server never hangs — every
    submitted Future resolves with a result or a typed serving error, and
    the shed / deadline / retry / compute-failure counters surface in
@@ -137,7 +137,7 @@ def serving_chaos(dataset, seed) -> dict:
     cfg = ServeConfig(engine="ref", max_batch=16, max_delay_s=0.001,
                       max_retries=3, retry_backoff_s=0.001)
     with TCAMServer(c, config=cfg, rng=np.random.default_rng(seed)) as s:
-        s.compute_fault_hook = flaky
+        s.fault_injection_hook = flaky
         res = s.serve(X[:32])
         retried = s.metrics()["reliability"]
         ok_after_retry = len(res) == 32 and retried["retries"] >= 2
@@ -161,7 +161,7 @@ def serving_chaos(dataset, seed) -> dict:
                       max_retries=1, retry_backoff_s=0.001)
     counts = {"ok": 0, "rejected": 0, "deadline": 0, "compute_failed": 0}
     with TCAMServer(c, config=cfg, rng=np.random.default_rng(seed)) as s:
-        s.compute_fault_hook = stall_then_fault
+        s.fault_injection_hook = stall_then_fault
         futs = [s.submit(x) for x in X[:40]]   # floods the bounded queue
         time.sleep(0.2)                        # queued requests expire
         gate.set()                             # stalled batch fails + retries
@@ -207,15 +207,15 @@ def main() -> None:
     p_grid = [float(p) for p in args.p_grid.split(",") if p]
 
     t0 = time.time()
+    # meta carries only seed-determined fields: same flags + same seed ->
+    # byte-identical artifact JSON (wall time goes to stdout, not the file)
     report = {
         "meta": {"datasets": datasets, "p_grid": p_grid,
-                 "trials": args.trials, "k": args.k, "seed": args.seed,
-                 "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+                 "trials": args.trials, "k": args.k, "seed": args.seed},
         "fault_sweep": fault_sweep(datasets, p_grid, args.trials,
                                    args.k, args.seed),
         "serving_chaos": serving_chaos(datasets[0], args.seed),
     }
-    report["meta"]["elapsed_s"] = round(time.time() - t0, 2)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

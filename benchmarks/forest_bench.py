@@ -79,6 +79,7 @@ def run(
         "dataset": dataset,
         "s": s,
         "batch": batch,
+        "seed": seed,
         "banks": rows,
         "modelled_decs_pipe_monotone": monotone,
     }
@@ -92,11 +93,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--engine", default="banked")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="forest training + query sampling seed (the "
+                         "artifact JSON is reproducible run-to-run)")
     ap.add_argument("--out", default=os.path.join(ART, "forest_bench.json"))
     args = ap.parse_args(argv)
 
     report = run(args.dataset, banks=tuple(args.banks), s=args.s,
-                 batch=args.batch, repeats=args.repeats, engine=args.engine)
+                 batch=args.batch, repeats=args.repeats, engine=args.engine,
+                 seed=args.seed)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

@@ -27,6 +27,13 @@ Serving (both single- and multi-bank models):
     >>> with repro.TCAMServer(compiled) as srv:
     ...     preds = [r.prediction for r in srv.serve(Xq)]
 
+Model lifecycle (versioned registry, delta reprogramming, hot swap):
+
+    >>> reg = repro.ModelRegistry("artifacts/registry")
+    >>> v1 = reg.publish(model.compiled, "traffic")
+    >>> mgr = repro.LifecycleManager(reg, srv, live_version=v1.version_id)
+    >>> mgr.stage(v2.version_id); ...; mgr.promote(max_disagreement=0.05)
+
 Everything importable eagerly here is numpy-only; jax-dependent names
 (``TCAMServer``, ``ForestExecutor``, the kernel entry points) load on first
 access via module ``__getattr__``.
@@ -61,6 +68,19 @@ from .core import (
     train_tree,
 )
 from .dt import DATASETS, load, load_split, normalize
+from .lifecycle import (
+    LifecycleManager,
+    ModelRegistry,
+    ModelVersion,
+    RemapResult,
+    WearTracker,
+    WritePlan,
+    content_hash,
+    plan_delta,
+    plan_forest_delta,
+    plan_full,
+    wear_level_rows,
+)
 from .forest import (
     CompiledForest,
     ForestBank,
@@ -90,12 +110,16 @@ __all__ = [
     "ForestPlan", "plan_forest",
     # datasets
     "DATASETS", "load", "load_split", "normalize",
+    # lifecycle: registry + delta reprogramming + wear
+    "ModelRegistry", "ModelVersion", "content_hash",
+    "WritePlan", "plan_delta", "plan_full", "plan_forest_delta",
+    "WearTracker", "RemapResult", "wear_level_rows", "LifecycleManager",
     # jax-dependent (lazy): kernels
     "tcam_infer", "tcam_match", "tcam_match_banked", "ENGINES",
     "BANKED_ENGINES", "select_engine", "finalize_result",
     # jax-dependent (lazy): executors + serving
     "ForestExecutor", "FOREST_ENGINES",
-    "TCAMServer", "ServeConfig", "RequestResult",
+    "TCAMServer", "ServeConfig", "RequestResult", "PromotionReport",
     "ServingError", "Rejected", "DeadlineExceeded", "ComputeFailed",
 ]
 
@@ -112,6 +136,7 @@ _LAZY = {
     "TCAMServer": "serve",
     "ServeConfig": "serve",
     "RequestResult": "serve",
+    "PromotionReport": "serve",
     "ServingError": "serve",
     "Rejected": "serve",
     "DeadlineExceeded": "serve",

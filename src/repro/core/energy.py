@@ -21,7 +21,8 @@ import math
 
 __all__ = ["HardwareParams", "DEFAULT_HW", "dynamic_range", "max_cells_per_row",
            "t_opt", "t_cwd", "f_max", "choose_tile_size", "TABLE_IV",
-           "bank_figures", "forest_figures"]
+           "bank_figures", "forest_figures", "write_energy",
+           "reprogram_figures"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,14 @@ class HardwareParams:
     a_sp: float = 0.03e-12       # [m²] selective-precharge circuit (Fig 5)
     a_1t1r: float = 0.007e-12    # [m²] class storage cell
     a_sa2: float = 0.15e-12      # [m²] class read SA ([32])
+    # --- programming (write) model: per resistive element -----------------
+    # ReRAM-class constants (RETENTION's endurance lever): a SET pulse moves
+    # an element HRS -> LRS, a RESET pulse LRS -> HRS; each pulse costs
+    # energy, takes t_prog, and consumes one endurance cycle of the element.
+    e_set: float = 1.0e-12       # SET pulse energy   [J]
+    e_reset: float = 1.5e-12     # RESET pulse energy [J] (higher V/ longer)
+    t_prog: float = 10.0e-9      # program pulse width [s]
+    endurance_writes: float = 1.0e6  # element program cycles before failure
 
     # Effective 2T2R cell resistances: the searched branch in series with its
     # transistor, in parallel with the idle branch through the OFF transistor.
@@ -137,6 +146,42 @@ def t_cwd(s: int, hw: HardwareParams = DEFAULT_HW) -> float:
 def f_max(s: int, hw: HardwareParams = DEFAULT_HW) -> float:
     """Eqn 10: operating frequency 1 / max(T_cwd, T_mem)."""
     return 1.0 / max(t_cwd(s, hw), hw.t_mem)
+
+
+# ---------------------------------------------------------------------------
+# Programming (write) figures — the lifecycle subsystem's energy model
+# ---------------------------------------------------------------------------
+
+def write_energy(
+    n_set: int, n_reset: int, hw: HardwareParams = DEFAULT_HW
+) -> float:
+    """Modelled energy [J] of a programming pass: per-element pulse counts
+    times the calibrated SET/RESET pulse energies."""
+    return float(n_set) * hw.e_set + float(n_reset) * hw.e_reset
+
+
+def reprogram_figures(plan, hw: HardwareParams = DEFAULT_HW) -> dict:
+    """Energy / time / endurance figures for one write plan.
+
+    Duck-typed: ``plan`` needs ``kind``, ``n_cells_written``, ``n_set``,
+    ``n_reset``, ``class_set``, ``class_reset`` and ``rows_touched`` (a
+    ``repro.lifecycle.WritePlan``).  Pulses are modelled as serialized
+    through one program driver (worst case): time = total pulses × t_prog.
+    """
+    n_set = int(plan.n_set) + int(plan.class_set)
+    n_reset = int(plan.n_reset) + int(plan.class_reset)
+    pulses = n_set + n_reset
+    return {
+        "kind": plan.kind,
+        "cells_written": int(plan.n_cells_written),
+        "rows_touched": int(plan.rows_touched),
+        "set_pulses": n_set,
+        "reset_pulses": n_reset,
+        "pulses": pulses,
+        "energy_j": write_energy(n_set, n_reset, hw),
+        "time_s": pulses * hw.t_prog,
+        "endurance_cycles_consumed": pulses,
+    }
 
 
 # ---------------------------------------------------------------------------

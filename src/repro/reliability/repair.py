@@ -69,6 +69,19 @@ class RepairReport:
     def rows_repaired(self) -> int:
         return len(self.assignments)
 
+    @property
+    def blocked_rows(self) -> np.ndarray:
+        """Physical rows that must not receive live content in a later
+        reprogramming pass: defective originals remapped onto spares, rows
+        left unrepaired, and un-silenceable ghosts.  This is the composition
+        point with the lifecycle wear-leveling remapper
+        (``repro.lifecycle.wear_level_rows(..., forbidden=report.blocked_rows)``).
+        """
+        return np.unique(np.asarray(
+            list(self.assignments.keys()) + self.unrepaired + self.ghosts,
+            dtype=np.int64,
+        ))
+
     def summary(self) -> dict:
         return {
             "rows_repaired": self.rows_repaired,

@@ -24,18 +24,24 @@ kernels, reachable from one line:
 (pipelined batched kernels, per-bank BIST/repair, ensemble vote
 aggregation) behind the exact same submit/serve/metrics API.
 
+Zero-downtime model updates: ``TCAMServer.stage()`` loads a candidate model
+into a shadow slot that mirrors a fraction of live traffic;
+``TCAMServer.promote()`` gates on shadow disagreement + the candidate's own
+canary and atomically swaps it live (``rollback()`` reverts).  The registry /
+delta-reprogramming half of that story lives in ``repro.lifecycle``.
+
 Fault tolerance across chips (majority voting) lives in
 ``repro.reliability.ReplicatedServer``.
 """
 from .batching import AdaptiveBatcher, BucketPolicy
 from .cache import CompileCache
-from .engine import RequestResult, ServeConfig, TCAMServer
+from .engine import PromotionReport, RequestResult, ServeConfig, TCAMServer
 from .errors import ComputeFailed, DeadlineExceeded, Rejected, ServingError
 from .metrics import LatencyStats, ServeMetrics
 
 __all__ = [
     "AdaptiveBatcher", "BucketPolicy", "CompileCache",
-    "RequestResult", "ServeConfig", "TCAMServer",
+    "PromotionReport", "RequestResult", "ServeConfig", "TCAMServer",
     "LatencyStats", "ServeMetrics",
     "ServingError", "Rejected", "DeadlineExceeded", "ComputeFailed",
 ]

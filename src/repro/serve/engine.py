@@ -78,7 +78,7 @@ from .cache import CompileCache
 from .errors import ComputeFailed, DeadlineExceeded, Rejected
 from .metrics import ServeMetrics
 
-__all__ = ["ServeConfig", "RequestResult", "TCAMServer"]
+__all__ = ["PromotionReport", "RequestResult", "ServeConfig", "TCAMServer"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +102,9 @@ class ServeConfig:
     canary_size: int = 32              # golden vectors per canary run
     canary_threshold: float = 0.9      # trip below this canary accuracy
     auto_repair: bool = True           # breaker ladder: BIST+repair first
+    # -- lifecycle ----------------------------------------------------------
+    compile_cache_size: Optional[int] = None  # LRU bound on compiled batch
+                                              # fns (None = unbounded)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +131,51 @@ class _Request:
     x: np.ndarray
     future: Future
     deadline: Optional[float] = None   # absolute clock time; None = no limit
+
+
+@dataclasses.dataclass(frozen=True)
+class PromotionReport:
+    """Outcome of one ``TCAMServer.promote()`` gate evaluation."""
+
+    promoted: bool
+    reason: str                   # 'promoted' | 'insufficient_shadow'
+                                  # | 'disagreement' | 'canary'
+    staged: bool                  # candidate still staged after the call
+    shadow_batches: int
+    shadow_requests: int
+    shadow_disagreements: int
+    disagreement_rate: float
+    canary_accuracy: float        # NaN when the canary gate never ran
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _CandidateState:
+    """Shadow slot: a fully-built chip state for the staged model.
+
+    Everything the live single-model path owns — faulted layout, programmed
+    intent, persistent SAF mask, SA offsets, resolved engine, its own warm
+    compile cache and golden canary — so promotion is a pure attribute swap
+    with no compile or sampling work inside the lock."""
+
+    compiled: CompiledDT
+    lut: object
+    layout: object
+    intent: np.ndarray
+    ideal_cells: np.ndarray
+    saf_mask: Optional[SAFMask]
+    kmax: Optional[np.ndarray]
+    engine: str
+    cache: CompileCache
+    canary: Optional[CanaryProbe]
+    mirror_fraction: float
+    live_batches: int = 0         # live batches seen since staging
+    shadow_batches: int = 0       # of those, mirrored to the candidate
+    shadow_requests: int = 0
+    shadow_disagreements: int = 0
+    shadow_errors: int = 0        # mirror computes that raised (live unharmed)
 
 
 class TCAMServer:
@@ -168,7 +216,15 @@ class TCAMServer:
         self.policy = BucketPolicy(
             max_batch=config.max_batch, min_bucket=config.min_bucket
         )
-        self.cache = CompileCache(self._build, self._layout_id())
+        self.cache = self._make_cache()
+
+        # -- lifecycle: shadow slot + atomic model swap --------------------
+        # every batch/canary runs its whole compute under this lock, so a
+        # promotion either lands before a batch (served by the new model)
+        # or after it (served by the old one) — never mid-flight
+        self._model_lock = threading.RLock()
+        self._candidate: Optional[_CandidateState] = None
+        self._prev: Optional[dict] = None   # stashed live state for rollback
 
         # -- chip-health machinery ----------------------------------------
         self.breaker = CircuitBreaker(threshold=config.canary_threshold)
@@ -182,7 +238,8 @@ class TCAMServer:
         self._repair_reports: list[RepairReport] = []
         # test/chaos seam: called with the batch's feature matrix right
         # before kernel dispatch; raising simulates a transient device fault
-        self.compute_fault_hook: Optional[Callable[[np.ndarray], None]] = None
+        # (renamed from compute_fault_hook; the old name stays as an alias)
+        self.fault_injection_hook: Optional[Callable[[np.ndarray], None]] = None
 
         self._batcher = AdaptiveBatcher(
             config.max_batch, config.max_delay_s,
@@ -291,14 +348,23 @@ class TCAMServer:
             self._f_group_kmax.append(km)
 
     # -- engine & compile machinery ---------------------------------------
-    def _layout_id(self) -> str:
-        if self._forest is not None:
+    def _layout_id(self, layout=None) -> str:
+        if layout is None and self._forest is not None:
             return "forest-" + self._f_plan.plan_id
+        lay = self._layout if layout is None else layout
         return hashlib.sha1(
-            self._layout.cells.tobytes()
-            + self._layout.classes.tobytes()
-            + bytes([self._layout.s % 251])
+            lay.cells.tobytes()
+            + lay.classes.tobytes()
+            + bytes([lay.s % 251])
         ).hexdigest()[:12]
+
+    def _make_cache(self, builder=None, layout_id: Optional[str] = None
+                    ) -> CompileCache:
+        return CompileCache(
+            builder if builder is not None else self._build,
+            layout_id if layout_id is not None else self._layout_id(),
+            maxsize=self._config.compile_cache_size,
+        )
 
     def _resolve_forest_engine(self, requested: str) -> str:
         """Forest engines: 'banked' (batched einsum), 'mxu' (vmapped Pallas),
@@ -322,9 +388,10 @@ class TCAMServer:
             "'banked', 'mxu' or 'ref'"
         )
 
-    def _resolve_engine(self, requested: str) -> str:
+    def _resolve_engine(self, requested: str, layout=None) -> str:
+        lay = self._layout if layout is None else layout
         try:
-            return select_engine(self._layout.cells, self._layout.s, requested)
+            return select_engine(lay.cells, lay.s, requested)
         except ValueError as e:
             if requested != "packed":
                 raise
@@ -344,7 +411,11 @@ class TCAMServer:
         Forest mode builds one jit'd banked match per plan group instead."""
         if self._forest is not None:
             return self._build_forest(bucket, engine)
-        layout, kmax = self._layout, self._kmax
+        return self._build_for(self._layout, self._kmax, bucket, engine)
+
+    def _build_for(self, layout, kmax, bucket: int, engine: str):
+        """Single-model batch function for an explicit chip state — shared
+        by the live path and the staged candidate's own compile cache."""
         interpret = self._config.interpret
         classes = jnp.asarray(layout.classes)
         km = None if kmax is None else jnp.asarray(kmax)
@@ -556,9 +627,13 @@ class TCAMServer:
         self._maybe_canary()
 
     def _process_inner(self, batch: list, deadline_flush: bool) -> None:
-        if self._forest is not None:
-            self._process_inner_forest(batch, deadline_flush)
-            return
+        with self._model_lock:
+            if self._forest is not None:
+                self._process_inner_forest(batch, deadline_flush)
+            else:
+                self._process_inner_single(batch, deadline_flush)
+
+    def _process_inner_single(self, batch: list, deadline_flush: bool) -> None:
         t_form = self._clock()
         reqs: Sequence[_Request] = [p.item for p in batch]
         queue_lat = np.array([t_form - p.t_enqueue for p in batch])
@@ -566,8 +641,8 @@ class TCAMServer:
         bucket = self.policy.bucket_for(n)
 
         X = np.stack([r.x for r in reqs])
-        if self.compute_fault_hook is not None:
-            self.compute_fault_hook(X)
+        if self.fault_injection_hook is not None:
+            self.fault_injection_hook(X)
         if self._spec.sigma_in > 0:
             X = X + self._rng.normal(0.0, self._spec.sigma_in, size=X.shape)
         xbits = encode_inputs(self._lut, X)
@@ -581,6 +656,12 @@ class TCAMServer:
         compute_s = self._clock() - t_form
 
         preds, survivors, nsurv, active = (np.asarray(o)[:n] for o in out)
+        # shadow deployment: mirror this (post-noise) batch to the staged
+        # candidate before resolving futures — a candidate-side failure must
+        # not fail, retry, or double-resolve the live batch
+        cand = self._candidate
+        if cand is not None and self._mirror_due(cand):
+            self._shadow_mirror(cand, X, bucket, preds)
         active = active.astype(np.int64)
         energy = active.astype(np.float64) * self._hw.e_row + self._hw.e_mem
 
@@ -630,8 +711,8 @@ class TCAMServer:
         bucket = self.policy.bucket_for(n)
 
         X = np.stack([r.x for r in reqs])
-        if self.compute_fault_hook is not None:
-            self.compute_fault_hook(X)
+        if self.fault_injection_hook is not None:
+            self.fault_injection_hook(X)
         if self._spec.sigma_in > 0:
             X = X + self._rng.normal(0.0, self._spec.sigma_in, size=X.shape)
         Xp = forest.prepare_inputs(X, who="TCAMServer")
@@ -703,6 +784,249 @@ class TCAMServer:
         with self._cond:
             self._outstanding -= n
             self._cond.notify_all()
+
+    # -- lifecycle: shadow deployment, promotion, rollback ------------------
+    _SWAP_ATTRS = ("_lut", "_intent", "_saf_mask", "_layout", "_ideal_cells",
+                   "_kmax", "engine", "cache", "_canary")
+
+    def _snapshot_model(self) -> dict:
+        return {a: getattr(self, a) for a in self._SWAP_ATTRS}
+
+    def _restore_model(self, state: dict) -> None:
+        for a, v in state.items():
+            setattr(self, a, v)
+
+    @property
+    def staged(self) -> bool:
+        """True while a candidate model occupies the shadow slot."""
+        return self._candidate is not None
+
+    @property
+    def live_intent(self) -> np.ndarray:
+        """The cell content currently programmed into the chip (single-model
+        mode) — the 'old' grid a lifecycle delta plan diffs against."""
+        if self._forest is not None:
+            raise RuntimeError(
+                "live_intent is single-model only; forest intents are "
+                "per-bank (see plan_forest_delta)"
+            )
+        return self._intent
+
+    @property
+    def live_layout(self):
+        """The served (possibly faulted/repaired) layout, single-model mode."""
+        if self._forest is not None:
+            raise RuntimeError("live_layout is single-model only")
+        return self._layout
+
+    def stage(self, candidate: CompiledDT, *,
+              mirror_fraction: float = 0.25, warm: bool = True) -> None:
+        """Load a candidate model into the shadow slot.
+
+        The candidate gets its own complete chip state on the same silicon:
+        the live chip's persistent SAF mask is reused when the candidate grid
+        matches its shape (a delta-reprogrammed array keeps its stuck
+        elements), a fresh mask is sampled when the grid was resized.  From
+        then on ``mirror_fraction`` of live batches are re-served through the
+        candidate's compute path and compared prediction-for-prediction;
+        ``promote()`` evaluates the gates and performs the atomic swap.
+
+        ``warm=True`` pre-compiles every bucket shape for the candidate so
+        promotion introduces no compile pause on the serving path.
+        """
+        if self._forest is not None or hasattr(candidate, "banks"):
+            raise NotImplementedError(
+                "shadow staging is single-model only; migrate forests "
+                "bank-by-bank via repro.lifecycle.plan_forest_delta"
+            )
+        if not 0.0 < mirror_fraction <= 1.0:
+            raise ValueError(
+                f"mirror_fraction must be in (0, 1], got {mirror_fraction}"
+            )
+        if candidate.tree.n_features != self._n_features:
+            raise FeatureMismatch(
+                f"candidate expects {candidate.tree.n_features} features but "
+                f"the live model serves {self._n_features}"
+            )
+        lay = candidate.layout
+        intent = np.array(lay.cells, copy=True)
+        mask: Optional[SAFMask] = None
+        if self._spec.has_saf:
+            if (self._saf_mask is not None
+                    and self._saf_mask.shape == intent.shape):
+                mask = self._saf_mask        # same physical array
+            else:
+                mask = sample_saf(
+                    intent.shape, self._spec.p_sa0, self._spec.p_sa1,
+                    self._rng,
+                )
+            faulted = apply_saf_mask(intent, mask)
+            faulted[:, 1 + lay.width:] = CELL_X
+            lay = dataclasses.replace(lay, cells=faulted)
+        kmax: Optional[np.ndarray] = None
+        if self._spec.sa_sigma > 0:
+            offsets = self._rng.normal(
+                0.0, self._spec.sa_sigma,
+                size=(lay.cells.shape[0], lay.n_cwd),
+            )
+            kmax = sa_kmax(lay, offsets, self._hw)
+        engine = self._resolve_engine(self._config.engine, lay)
+        cache = self._make_cache(
+            functools.partial(self._build_for, lay, kmax),
+            self._layout_id(lay),
+        )
+        n_canary = min(self._config.canary_size, self._config.max_batch)
+        canary = (make_canary(candidate.layout, n_canary, self._rng)
+                  if n_canary > 0 else None)
+        cand = _CandidateState(
+            compiled=candidate, lut=candidate.lut, layout=lay, intent=intent,
+            ideal_cells=np.array(candidate.layout.cells, copy=True),
+            saf_mask=mask, kmax=kmax, engine=engine, cache=cache,
+            canary=canary, mirror_fraction=float(mirror_fraction),
+        )
+        if warm:
+            w = lay.n_cwd * lay.s
+            for b in self.policy.buckets:
+                jax.block_until_ready(
+                    cache.get(b, engine)(jnp.zeros((b, w), jnp.uint8))
+                )
+        with self._model_lock:
+            if self._candidate is not None:
+                raise RuntimeError(
+                    "a candidate is already staged; promote() or rollback() "
+                    "it first"
+                )
+            self._candidate = cand
+        self.metrics_store.on_stage()
+
+    def _mirror_due(self, cand: _CandidateState) -> bool:
+        """Deterministic traffic mirroring: batch i is mirrored whenever the
+        running count crosses the next multiple of 1/fraction — exactly
+        ``mirror_fraction`` of live batches, no RNG involved."""
+        cand.live_batches += 1
+        f = cand.mirror_fraction
+        return int(cand.live_batches * f) > int((cand.live_batches - 1) * f)
+
+    def _shadow_mirror(self, cand: _CandidateState, X: np.ndarray,
+                       bucket: int, live_preds: np.ndarray) -> None:
+        n = X.shape[0]
+        try:
+            xbits = encode_inputs(cand.lut, X)
+            xpad = cand.layout.pad_inputs(xbits)
+            if bucket > n:
+                xpad = np.pad(xpad, ((0, bucket - n), (0, 0)))
+            fn = cand.cache.get(bucket, cand.engine)
+            preds = np.asarray(fn(jnp.asarray(xpad))[0])[:n]
+        except Exception:
+            cand.shadow_errors += 1
+            return
+        disagreements = int((preds != live_preds).sum())
+        cand.shadow_batches += 1
+        cand.shadow_requests += n
+        cand.shadow_disagreements += disagreements
+        self.metrics_store.on_shadow(n, disagreements)
+
+    def _run_candidate_canary(self, cand: _CandidateState) -> float:
+        """Candidate golden vectors through the candidate compute path."""
+        if cand.canary is None:
+            return float("nan")
+        words = cand.canary.words
+        n = len(cand.canary)
+        bucket = self.policy.bucket_for(n)
+        xpad = np.zeros((bucket, words.shape[1]), np.uint8)
+        xpad[:n] = words
+        fn = cand.cache.get(bucket, cand.engine)
+        preds = np.asarray(fn(jnp.asarray(xpad))[0])[:n]
+        return cand.canary.accuracy(preds)
+
+    def promote(self, *, min_shadow_batches: int = 1,
+                max_disagreement: float = 0.0) -> PromotionReport:
+        """Evaluate the promotion gates; on success atomically swap the
+        candidate into the live slot (the previous model is stashed for
+        ``rollback()``).
+
+        Gates, in order:
+
+        1. shadow exposure — fewer than ``min_shadow_batches`` mirrored
+           batches leaves the candidate *staged* (not an error: it simply
+           has not seen enough traffic yet);
+        2. disagreement — candidate-vs-live prediction drift above
+           ``max_disagreement`` unstages the candidate (a retrained model
+           legitimately disagrees; the operator sets the tolerance);
+        3. candidate canary — the candidate's own golden vectors through its
+           compute path must reach ``canary_threshold`` accuracy, else the
+           candidate is unstaged (its chip state is unhealthy).
+
+        The swap happens under the model lock: in-flight batches finish on
+        the old model, later batches ride the new one, every Future resolves.
+        """
+        with self._model_lock:
+            cand = self._candidate
+            if cand is None:
+                raise RuntimeError("no candidate staged; call stage() first")
+            rate = (cand.shadow_disagreements / cand.shadow_requests
+                    if cand.shadow_requests else 0.0)
+
+            def report(promoted: bool, reason: str, staged: bool,
+                       acc: float = float("nan")) -> PromotionReport:
+                return PromotionReport(
+                    promoted=promoted, reason=reason, staged=staged,
+                    shadow_batches=cand.shadow_batches,
+                    shadow_requests=cand.shadow_requests,
+                    shadow_disagreements=cand.shadow_disagreements,
+                    disagreement_rate=rate, canary_accuracy=acc,
+                )
+
+            if cand.shadow_batches < min_shadow_batches:
+                return report(False, "insufficient_shadow", True)
+            if rate > max_disagreement:
+                self._candidate = None
+                self.metrics_store.on_promotion(False)
+                return report(False, "disagreement", False)
+            acc = self._run_candidate_canary(cand)
+            if cand.canary is not None and \
+                    acc < self._config.canary_threshold:
+                self._candidate = None
+                self.metrics_store.on_promotion(False)
+                return report(False, "canary", False, acc)
+
+            self._prev = self._snapshot_model()
+            self._lut = cand.lut
+            self._intent = cand.intent
+            self._saf_mask = cand.saf_mask
+            self._layout = cand.layout
+            self._ideal_cells = cand.ideal_cells
+            self._kmax = cand.kmax
+            self.engine = cand.engine
+            self.cache = cand.cache
+            self._canary = cand.canary
+            self._candidate = None
+            self.metrics_store.on_promotion(True)
+            if cand.canary is not None:
+                self.metrics_store.on_canary(
+                    acc >= self._config.canary_threshold, acc
+                )
+                self.breaker.observe(acc)
+            return report(True, "promoted", False, acc)
+
+    def rollback(self) -> str:
+        """Back out of the lifecycle: a staged candidate is unstaged
+        (returns 'unstaged'); otherwise the model stashed by the last
+        promotion is swapped back in (returns 'reverted')."""
+        with self._model_lock:
+            if self._candidate is not None:
+                self._candidate = None
+                self.metrics_store.on_rollback()
+                return "unstaged"
+            if self._prev is not None:
+                self._restore_model(self._prev)
+                self._prev = None
+                self.metrics_store.on_rollback()
+                return "reverted"
+            raise RuntimeError(
+                "nothing to roll back: no candidate staged and no previous "
+                "model stashed"
+            )
 
     # -- chip health: BIST, repair, canary, breaker ------------------------
     def self_test(self):
@@ -800,26 +1124,27 @@ class TCAMServer:
             if self.engine != "ref":
                 self.engine = self._resolve_forest_engine(self._config.engine)
             self._rebuild_plan()
-            self.cache = CompileCache(self._build, self._layout_id())
+            self.cache = self._make_cache()
             return
         if self.engine != "ref":
             self.engine = self._resolve_engine(self._config.engine)
-        self.cache = CompileCache(self._build, self._layout_id())
+        self.cache = self._make_cache()
 
     def run_canary(self) -> float:
         """Replay the golden vectors through the live compute path; returns
         canary accuracy (and records it in the metrics)."""
-        if self._canary is None:
-            raise RuntimeError("canary disabled (canary_size <= 0)")
-        words = self._canary.words
-        n = len(self._canary)
-        bucket = self.policy.bucket_for(n)
-        xpad = np.zeros((bucket, words.shape[1]), np.uint8)
-        xpad[:n] = words
-        fn = self.cache.get(bucket, self.engine)
-        out = fn(jnp.asarray(xpad))
-        preds = np.asarray(out[0])[:n]
-        acc = self._canary.accuracy(preds)
+        with self._model_lock:
+            if self._canary is None:
+                raise RuntimeError("canary disabled (canary_size <= 0)")
+            words = self._canary.words
+            n = len(self._canary)
+            bucket = self.policy.bucket_for(n)
+            xpad = np.zeros((bucket, words.shape[1]), np.uint8)
+            xpad[:n] = words
+            fn = self.cache.get(bucket, self.engine)
+            out = fn(jnp.asarray(xpad))
+            preds = np.asarray(out[0])[:n]
+            acc = self._canary.accuracy(preds)
         self.metrics_store.on_canary(
             acc >= self._config.canary_threshold, acc
         )
@@ -850,7 +1175,7 @@ class TCAMServer:
                 return
         if self.engine != "ref":
             self.engine = "ref"
-            self.cache = CompileCache(self._build, self._layout_id())
+            self.cache = self._make_cache()
             acc = self.run_canary()
             if acc >= thr:
                 self.breaker.recovered("fallback_ref", acc)
@@ -888,6 +1213,7 @@ class TCAMServer:
             "state": self.breaker.state,
             "engine": self.engine,
             "breaker": self.breaker.snapshot(),
+            "candidate_staged": self._candidate is not None,
             "spares_total": self._layout.n_spares,
             "spares_free": spares_free,
             "repair_attempts": len(self._repair_reports),
@@ -898,6 +1224,18 @@ class TCAMServer:
         }
 
     # -- convenience & lifecycle -------------------------------------------
+    @property
+    def compute_fault_hook(self) -> Optional[Callable[[np.ndarray], None]]:
+        """Deprecated alias of ``fault_injection_hook`` (renamed; see the
+        README migration notes)."""
+        return self.fault_injection_hook
+
+    @compute_fault_hook.setter
+    def compute_fault_hook(
+        self, fn: Optional[Callable[[np.ndarray], None]]
+    ) -> None:
+        self.fault_injection_hook = fn
+
     def serve(self, X: np.ndarray) -> list[RequestResult]:
         """Submit every row of X, wait for completion, return results in
         submission order."""

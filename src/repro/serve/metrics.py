@@ -94,6 +94,14 @@ class ServeMetrics:
         self.repairs = 0              # repair attempts (BIST + spare remap)
         self.rows_repaired = 0
         self.last_canary_acc = float("nan")
+        # -- lifecycle (shadow deployment / promotion) -------------------------
+        self.stages = 0               # candidates staged into the shadow slot
+        self.shadow_batches = 0       # live batches mirrored to the candidate
+        self.shadow_requests = 0      # requests the candidate shadow-served
+        self.shadow_disagreements = 0  # candidate != live predictions
+        self.promotions = 0           # successful atomic swaps
+        self.promotion_failures = 0   # promote() gates rejected the candidate
+        self.rollbacks = 0            # explicit rollback() calls honored
         self.queue = LatencyStats()
         self.compute = LatencyStats()
         self.total = LatencyStats()
@@ -132,6 +140,25 @@ class ServeMetrics:
         with self._lock:
             self.repairs += 1
             self.rows_repaired += rows
+
+    def on_stage(self) -> None:
+        with self._lock:
+            self.stages += 1
+
+    def on_shadow(self, n: int, disagreements: int) -> None:
+        with self._lock:
+            self.shadow_batches += 1
+            self.shadow_requests += n
+            self.shadow_disagreements += disagreements
+
+    def on_promotion(self, ok: bool) -> None:
+        with self._lock:
+            self.promotions += int(ok)
+            self.promotion_failures += int(not ok)
+
+    def on_rollback(self) -> None:
+        with self._lock:
+            self.rollbacks += 1
 
     def on_batch(
         self,
@@ -184,6 +211,19 @@ class ServeMetrics:
                     "repairs": self.repairs,
                     "rows_repaired": self.rows_repaired,
                     "last_canary_acc": self.last_canary_acc,
+                },
+                "lifecycle": {
+                    "stages": self.stages,
+                    "shadow_batches": self.shadow_batches,
+                    "shadow_requests": self.shadow_requests,
+                    "shadow_disagreements": self.shadow_disagreements,
+                    "shadow_disagreement_rate": (
+                        self.shadow_disagreements / self.shadow_requests
+                        if self.shadow_requests else 0.0
+                    ),
+                    "promotions": self.promotions,
+                    "promotion_failures": self.promotion_failures,
+                    "rollbacks": self.rollbacks,
                 },
             }
         out["queue_latency"] = self.queue.summary_ms()

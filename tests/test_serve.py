@@ -9,9 +9,9 @@ import pytest
 
 from repro.core import DT2CAM, NonIdealSpec
 from repro.dt import load_split
-from repro.serve import (AdaptiveBatcher, BucketPolicy, ComputeFailed,
-                         DeadlineExceeded, LatencyStats, Rejected,
-                         ServeConfig, TCAMServer)
+from repro.serve import (AdaptiveBatcher, BucketPolicy, CompileCache,
+                         ComputeFailed, DeadlineExceeded, LatencyStats,
+                         Rejected, ServeConfig, TCAMServer)
 
 
 @pytest.fixture(scope="module")
@@ -81,6 +81,88 @@ def test_latency_stats_percentiles():
     assert ls.p50 == pytest.approx(0.0505, rel=0.05)
     assert ls.p99 > ls.p50
     assert np.isnan(LatencyStats().p50)
+
+
+def test_latency_stats_empty_window_is_nan_everywhere():
+    ls = LatencyStats()
+    assert ls.count == 0
+    for v in (ls.p50, ls.p99, ls.mean, ls.percentile(10.0)):
+        assert np.isnan(v)
+    s = ls.summary_ms()
+    assert np.isnan(s["p50_ms"]) and np.isnan(s["p99_ms"])
+    assert np.isnan(s["mean_ms"]) and s["count"] == 0.0
+
+
+def test_latency_stats_single_sample_collapses_percentiles():
+    ls = LatencyStats()
+    ls.record(0.042)
+    assert ls.count == 1
+    assert ls.p50 == ls.p99 == ls.mean == pytest.approx(0.042)
+    s = ls.summary_ms()
+    assert s["p50_ms"] == s["p99_ms"] == pytest.approx(42.0)
+
+
+def test_latency_stats_identical_samples_p50_equals_p99():
+    ls = LatencyStats(capacity=16)
+    for _ in range(50):                  # also wraps the bounded ring
+        ls.record(0.007)
+    assert ls.count == 50
+    assert ls.p50 == ls.p99 == pytest.approx(0.007)
+    assert ls.percentile(0.0) == ls.percentile(100.0) == pytest.approx(0.007)
+
+
+def test_compile_cache_lru_bound_and_eviction_counter():
+    built = []
+
+    def builder(bucket, engine):
+        built.append((bucket, engine))
+        return lambda x, b=bucket: (b, x)
+
+    c = CompileCache(builder, "lay0", maxsize=2)
+    c.get(8, "mxu")
+    c.get(16, "mxu")
+    assert c.get(8, "mxu")(0) == (8, 0)          # hit, now most recent
+    c.get(32, "mxu")                             # evicts LRU key (16)
+    assert len(c) == 2 and c.evictions == 1
+    c.get(16, "mxu")                             # rebuild: a fresh miss
+    assert built == [(8, "mxu"), (16, "mxu"), (32, "mxu"), (16, "mxu")]
+    st = c.stats()
+    assert st == {"hits": 1, "misses": 4, "evictions": 2,
+                  "size": 2, "maxsize": 2}
+    with pytest.raises(ValueError):
+        CompileCache(builder, "lay0", maxsize=0)
+    # unbounded default: nothing ever evicted
+    u = CompileCache(builder, "lay1")
+    for b in (8, 16, 32, 64):
+        u.get(b, "ref")
+    assert len(u) == 4 and u.evictions == 0
+    assert u.stats()["maxsize"] is None
+
+
+def test_server_honors_compile_cache_size(iris_model):
+    m, Xte, _ = iris_model
+    cfg = ServeConfig(background=False, max_batch=64, min_bucket=8,
+                      engine="ref", compile_cache_size=2)
+    srv = TCAMServer(m.compiled, config=cfg)
+    srv.warmup()                                 # 4 buckets through size-2 LRU
+    st = srv.cache.stats()
+    assert st["size"] <= 2 and st["evictions"] >= 2
+    res = srv.serve(Xte[:5])                     # evicted shapes rebuild fine
+    assert len(res) == 5
+    srv.close()
+
+
+def test_fault_hook_rename_alias(iris_model):
+    """compute_fault_hook was renamed fault_injection_hook; the old name
+    must keep working as a read/write alias (see README migration notes)."""
+    m, _, _ = iris_model
+    srv = TCAMServer(m.compiled, config=ServeConfig(background=False))
+    hook = lambda _X: None                                    # noqa: E731
+    srv.compute_fault_hook = hook
+    assert srv.fault_injection_hook is hook
+    srv.fault_injection_hook = None
+    assert srv.compute_fault_hook is None
+    srv.close()
 
 
 # --------------------------------------------------------------------------
