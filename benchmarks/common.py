@@ -1,7 +1,13 @@
 """Shared benchmark infrastructure: dataset -> fitted/compiled DT2CAM with
-on-disk tree caching (Credit takes ~10s to fit; cache under artifacts/)."""
+on-disk tree caching (Credit takes ~10s to fit; cache under artifacts/),
+plus the seeding / artifact-writing conventions every benchmark follows:
+a ``--seed`` flag (``add_seed_arg``) and a JSON artifact whose content is
+fully seed-determined — wall-clock numbers go to stdout, never into the
+file (``write_artifact``), so same flags + same seed => byte-identical
+artifact."""
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -13,7 +19,27 @@ from repro.dt import DATASETS, load_split
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 TREES = os.path.join(ART, "trees")
 
-__all__ = ["fitted_tree", "compiled", "ART", "emit"]
+__all__ = ["fitted_tree", "compiled", "ART", "emit", "add_seed_arg",
+           "write_artifact"]
+
+
+def add_seed_arg(ap, default: int = 0) -> None:
+    """The shared ``--seed`` flag: one integer seeding every RNG the
+    benchmark touches, making the artifact JSON reproducible."""
+    ap.add_argument(
+        "--seed", type=int, default=default,
+        help="RNG seed; same flags + same seed -> byte-identical artifact",
+    )
+
+
+def write_artifact(path: str, report) -> None:
+    """Write a benchmark report as indented JSON (CI artifact).  Callers
+    must keep wall-clock-dependent values out of ``report`` — print those
+    to stdout instead — so the artifact stays seed-deterministic."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {path}")
 
 
 def fitted_tree(name: str) -> tuple[DecisionTree, tuple]:

@@ -1,14 +1,15 @@
 """Serving-engine load benchmark: push a randomized request stream through
-``repro.serve.TCAMServer`` and dump a JSON report (throughput, p50/p99
-queue/compute/total latency, batch fill, jit compile counts, modelled ReCAM
-energy/throughput) to ``artifacts/serve_bench.json``.
+``repro.serve.TCAMServer``, print wall-clock throughput/latency to stdout,
+and dump the seed-deterministic portion of the report (accuracy, request
+counters, modelled ReCAM energy/throughput, layout geometry) as JSON to
+``artifacts/serve_bench.json`` — same flags + same ``--seed`` produce a
+byte-identical artifact.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--requests 2048]
+    PYTHONPATH=src python -m benchmarks.serve_bench [--requests 2048] [--seed 0]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -17,7 +18,18 @@ import numpy as np
 from repro.dt import load_split
 from repro.serve import ServeConfig, TCAMServer
 
-from .common import ART, compiled
+from .common import ART, add_seed_arg, compiled, write_artifact
+
+# Keys of the metrics snapshot that are a pure function of (flags, seed):
+# request stream, accuracy, modelled energy per decision, and layout-derived
+# hardware figures.  Batching/latency/jit counters depend on wall-clock batch
+# formation and stay out of the artifact.
+DETERMINISTIC_KEYS = (
+    "dataset", "s", "engine", "buckets",
+    "requests_enqueued", "requests_served", "accuracy",
+    "modelled_nj_per_dec", "active_evals",
+    "modelled_mdecs_seq", "modelled_mdecs_pipe", "layout",
+)
 
 
 def run(
@@ -64,15 +76,24 @@ def main(argv=None) -> list[dict]:
     ap.add_argument("--max-batch", type=int, default=128)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--engine", default="auto")
+    add_seed_arg(ap)
     ap.add_argument("--out", default=os.path.join(ART, "serve_bench.json"))
     args = ap.parse_args(argv)
 
     reports = run(tuple(args.datasets), requests=args.requests, s=args.s,
                   max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
-                  engine=args.engine)
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(reports, f, indent=2)
+                  engine=args.engine, seed=args.seed)
+    artifact = {
+        "meta": {
+            "datasets": list(args.datasets), "requests": args.requests,
+            "s": args.s, "max_batch": args.max_batch,
+            "max_delay_ms": args.max_delay_ms, "engine": args.engine,
+            "seed": args.seed,
+        },
+        "results": [
+            {k: r[k] for k in DETERMINISTIC_KEYS if k in r} for r in reports
+        ],
+    }
     for r in reports:
         print(f"{r['dataset']:>8}: {r['throughput_rps']:8.0f} req/s  "
               f"total p50/p99 {r['total_latency']['p50_ms']:6.2f}/"
@@ -81,7 +102,7 @@ def main(argv=None) -> list[dict]:
               f"compiles {r['jit_cache']['misses']}  "
               f"{r['modelled_nj_per_dec']:.4f} nJ/dec  "
               f"acc {r['accuracy']:.4f}")
-    print(f"# wrote {args.out}")
+    write_artifact(args.out, artifact)
     return reports
 
 

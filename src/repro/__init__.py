@@ -1,12 +1,12 @@
 """DT2CAM reproduction — blessed public API.
 
 Import policy (see README "Import policy"): user code — examples, benchmarks,
-notebooks, downstream services — imports from **this** module (or the four
-stable sub-packages ``repro.core``, ``repro.forest``, ``repro.serve``,
-``repro.dt``), never from deep module paths like ``repro.core.compiler`` or
-``repro.serve.engine``.  Deep paths are implementation detail and move
-without deprecation; everything in ``__all__`` below is covered by the
-one-release deprecation policy.
+notebooks, downstream services — imports from **this** module (or the stable
+sub-packages ``repro.core``, ``repro.forest``, ``repro.serve``, ``repro.dt``,
+``repro.degradation``), never from deep module paths like
+``repro.core.compiler`` or ``repro.serve.engine``.  Deep paths are
+implementation detail and move without deprecation; everything in ``__all__``
+below is covered by the one-release deprecation policy.
 
 Single tree:
 
@@ -48,11 +48,14 @@ from .core import (
     IDEAL,
     CompiledDT,
     DecisionTree,
+    DriftModel,
+    DriftSpec,
     FeatureMismatch,
     HardwareParams,
     NonIdealSpec,
     RuleTable,
     SAFMask,
+    SenseMargins,
     SimResult,
     TCAMLayout,
     TernaryLUT,
@@ -62,10 +65,20 @@ from .core import (
     encode_inputs,
     encode_table,
     forest_figures,
+    mismatch_probability,
     reduce_tree,
+    sample_drift,
+    sensing_margins,
     simulate,
     synthesize,
     train_tree,
+)
+from .degradation import (
+    ScrubPolicy,
+    ScrubReport,
+    ScrubScheduler,
+    layout_margins,
+    plan_refresh,
 )
 from .dt import DATASETS, load, load_split, normalize
 from .lifecycle import (
@@ -102,8 +115,13 @@ __all__ = [
     # validation + non-idealities
     "FeatureMismatch", "check_feature_count",
     "NonIdealSpec", "IDEAL", "SAFMask",
+    "DriftSpec", "DriftModel", "sample_drift",
     # hardware model
     "HardwareParams", "DEFAULT_HW", "bank_figures", "forest_figures",
+    "SenseMargins", "sensing_margins", "mismatch_probability",
+    # degradation: scrub-and-refresh scheduling
+    "ScrubPolicy", "ScrubReport", "ScrubScheduler",
+    "plan_refresh", "layout_margins",
     # forests
     "CompiledForest", "ForestBank", "ForestResult", "compile_forest",
     "train_forest", "forest_infer_ref", "aggregate_votes",

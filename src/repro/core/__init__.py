@@ -18,13 +18,16 @@ from .encode import encode_inputs, encode_table, span_code, unary_code
 from .energy import (
     DEFAULT_HW,
     HardwareParams,
+    SenseMargins,
     bank_figures,
     choose_tile_size,
     dynamic_range,
     f_max,
     forest_figures,
     max_cells_per_row,
+    mismatch_probability,
     reprogram_figures,
+    sensing_margins,
     t_cwd,
     t_opt,
     write_energy,
@@ -32,11 +35,14 @@ from .energy import (
 from .lut import CELL_0, CELL_1, CELL_MM, CELL_X, TernaryLUT, bitplanes
 from .nonideal import (
     IDEAL,
+    DriftModel,
+    DriftSpec,
     NonIdealSpec,
     SAFMask,
     apply_saf,
     apply_saf_mask,
     noisy_inputs,
+    sample_drift,
     sample_saf,
 )
 from .reduce import CMP_BETWEEN, CMP_GT, CMP_LE, CMP_NONE, RuleTable, reduce_tree
@@ -51,9 +57,11 @@ __all__ = [
     "DEFAULT_HW", "HardwareParams", "choose_tile_size", "dynamic_range",
     "f_max", "max_cells_per_row", "t_cwd", "t_opt",
     "bank_figures", "forest_figures", "write_energy", "reprogram_figures",
+    "SenseMargins", "sensing_margins", "mismatch_probability",
     "CELL_0", "CELL_1", "CELL_MM", "CELL_X", "TernaryLUT", "bitplanes",
     "IDEAL", "NonIdealSpec", "SAFMask", "apply_saf", "apply_saf_mask",
     "noisy_inputs", "sample_saf",
+    "DriftSpec", "DriftModel", "sample_drift",
     "CMP_BETWEEN", "CMP_GT", "CMP_LE", "CMP_NONE", "RuleTable", "reduce_tree",
     "SimResult", "mismatch_counts", "simulate",
     "TCAMLayout", "synthesize",

@@ -22,7 +22,8 @@ import math
 __all__ = ["HardwareParams", "DEFAULT_HW", "dynamic_range", "max_cells_per_row",
            "t_opt", "t_cwd", "f_max", "choose_tile_size", "TABLE_IV",
            "bank_figures", "forest_figures", "write_energy",
-           "reprogram_figures"]
+           "reprogram_figures", "SenseMargins", "sensing_margins",
+           "mismatch_probability"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +183,132 @@ def reprogram_figures(plan, hw: HardwareParams = DEFAULT_HW) -> dict:
         "time_s": pulses * hw.t_prog,
         "endurance_cycles_consumed": pulses,
     }
+
+
+# ---------------------------------------------------------------------------
+# Sensing-margin analysis — the degradation subsystem's detection model
+# ---------------------------------------------------------------------------
+# The SA references are trimmed at manufacture to the *nominal* per-division
+# V_ref (midpoint of V_fm / V_1mm for ideal Table-III resistances — the same
+# convention the simulator's sa_sigma model uses).  As cells drift, the
+# match-line voltages move while V_ref stays fixed; the distance between them
+# is the sensing margin, and a chip is due for a scrub when it shrinks.
+
+import numpy as np  # noqa: E402  (module is otherwise numpy-free)
+
+_erfc = np.vectorize(math.erfc, otypes=[np.float64])
+
+
+@dataclasses.dataclass(frozen=True)
+class SenseMargins:
+    """Worst-case (over column divisions) per-row sensing margins [V].
+
+    ``margin_match``: V_ml(full match) − V_ref — headroom before a fully
+    matching row misreads as a mismatch (drifted-up LRS / drifted-down HRS
+    erode it).  ``margin_mismatch``: V_ref − V_ml(worst single mismatch) —
+    headroom before a one-mismatch row misreads as a match.  Either going
+    negative means the row *functionally* misbehaves even with ideal SAs.
+    """
+
+    margin_match: np.ndarray      # (rows,) [V]
+    margin_mismatch: np.ndarray   # (rows,) [V]
+    v_ref: np.ndarray             # (n_cwd,) nominal per-division reference [V]
+
+    @property
+    def margin(self) -> np.ndarray:
+        """(rows,) overall margin: min of the two failure directions."""
+        return np.minimum(self.margin_match, self.margin_mismatch)
+
+    def summary(self) -> dict:
+        m = self.margin
+        return {
+            "min_v": float(m.min()) if m.size else float("nan"),
+            "mean_v": float(m.mean()) if m.size else float("nan"),
+            "rows_negative": int((m < 0).sum()),
+        }
+
+
+def _ml_voltage(g_row, s: int, hw: HardwareParams):
+    """Match-line voltage at the sensing instant for per-row conductance
+    g_row [S]: v_dd · exp(−T_opt(S) · g / C_in)  (simulate.sense_voltage
+    with R_row = 1/g; reimplemented here because simulate imports energy)."""
+    return hw.v_dd * np.exp(-t_opt(s, hw) * np.asarray(g_row) / hw.c_in)
+
+
+def sensing_margins(
+    r_match: np.ndarray,
+    r_mismatch: np.ndarray,
+    *,
+    s: int,
+    used: int,
+    hw: HardwareParams = DEFAULT_HW,
+    determinate: np.ndarray | None = None,
+) -> SenseMargins:
+    """Per-row sensing margins of a (possibly drifted) cell grid.
+
+    ``r_match`` / ``r_mismatch`` are (rows, cols) per-cell effective
+    resistances in the match / mismatch search state (e.g. from
+    ``DriftModel.cell_resistances``; at zero drift every determinate cell sits
+    at ``hw.r_cell_match`` / ``hw.r_cell_mismatch`` and the margins equal the
+    design margins).  ``used`` = 1 + layout.width: columns at or beyond it are
+    masked (OFF-OFF) and excluded, matching the simulator.  ``determinate``
+    optionally masks which cells can actually mismatch (CELL_X never does);
+    by default every unmasked cell is considered.
+    """
+    r_match = np.asarray(r_match, dtype=np.float64)
+    r_mismatch = np.asarray(r_mismatch, dtype=np.float64)
+    if r_match.shape != r_mismatch.shape or r_match.ndim != 2:
+        raise ValueError("r_match / r_mismatch must be equal-shape 2-D grids")
+    rows, cols = r_match.shape
+    n_cwd = max(1, -(-cols // s))
+    if determinate is None:
+        determinate = np.ones((rows, cols), dtype=bool)
+
+    m_match = np.full(rows, np.inf)
+    m_mismatch = np.full(rows, np.inf)
+    v_refs = np.zeros(n_cwd)
+    for d in range(n_cwd):
+        lo = d * s
+        real = max(0, min((d + 1) * s, used, cols) - lo)
+        if real == 0:
+            continue
+        # nominal division references (ideal resistances, n_eff = real)
+        g_fm_nom = real / hw.r_cell_match
+        g_1mm_nom = (real - 1) / hw.r_cell_match + 1.0 / hw.r_cell_mismatch
+        v_ref = 0.5 * (_ml_voltage(g_fm_nom, s, hw)
+                       + _ml_voltage(g_1mm_nom, s, hw))
+        v_refs[d] = v_ref
+
+        g_cells = 1.0 / r_match[:, lo:lo + real]          # (rows, real)
+        g_fm = g_cells.sum(axis=1)                        # all cells match
+        m_match = np.minimum(m_match, _ml_voltage(g_fm, s, hw) - v_ref)
+
+        # worst single mismatch: the determinate cell whose match->mismatch
+        # swap adds the LEAST conductance discharges the line the least and
+        # sits closest to (or above) V_ref
+        det = determinate[:, lo:lo + real]
+        delta = np.where(det, 1.0 / r_mismatch[:, lo:lo + real] - g_cells,
+                         np.inf)
+        d_min = delta.min(axis=1)                         # inf if none can mm
+        has_mm = np.isfinite(d_min)
+        if has_mm.any():
+            v_1mm = _ml_voltage(g_fm[has_mm] + d_min[has_mm], s, hw)
+            m_mismatch[has_mm] = np.minimum(m_mismatch[has_mm], v_ref - v_1mm)
+
+    return SenseMargins(margin_match=m_match, margin_mismatch=m_mismatch,
+                        v_ref=v_refs)
+
+
+def mismatch_probability(margin, sa_sigma: float) -> np.ndarray:
+    """Probability that an SA with reference offset ~N(0, sa_sigma) misreads
+    a row with the given sensing margin [V]: the Gaussian tail beyond the
+    margin.  sa_sigma = 0 degenerates to a step (0 / ½ / 1)."""
+    m = np.asarray(margin, dtype=np.float64)
+    if sa_sigma < 0:
+        raise ValueError(f"sa_sigma must be >= 0, got {sa_sigma}")
+    if sa_sigma == 0:
+        return np.where(m > 0, 0.0, np.where(m < 0, 1.0, 0.5))
+    return 0.5 * _erfc(m / (sa_sigma * math.sqrt(2.0)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """Hardware non-idealities (paper §II.C.2, Table I, Fig 7/8).
 
-Three mechanisms:
+Static mechanisms (fixed at manufacturing / write time):
   * Stuck-At-Faults: each of the two resistive elements of a 2T2R cell
     independently sticks to HRS (SA0, prob p_sa0) or LRS (SA1, prob p_sa1).
     The resulting {R1, R2} pair maps back to a cell state, including the
@@ -10,18 +10,28 @@ Three mechanisms:
   * Input encoding noise: N(0, σ_in) added to normalized features before
     encoding.
 
-Stuck-at faults are a *physical, persistent* property of a chip: the same
-elements stay stuck no matter what is later written to the array.  The fault
-state is therefore factored into an explicit ``SAFMask`` (sampled once per
-chip with ``sample_saf``) that can be re-applied to any cell contents with
-``apply_saf_mask`` — this is what makes spare-row repair honest: writing new
-content to a row goes *through* the row's stuck elements
-(``repro.reliability.repair``).  ``apply_saf`` remains the one-shot
-convenience wrapper (sample + apply).
+Temporal mechanisms (grow *between* writes — Pedretti et al.'s first-order
+threat to CAM-resident tree inference):
+  * Conductance drift: each programmed element's resistance walks away from
+    its nominal state on a log-time power law ``(1 + t/t0)^ν`` with a
+    per-element exponent ν (chip-persistent, sampled once like stuck faults).
+  * Retention decay: an additional exponential loss ``exp(t/τ_ret)`` that
+    dominates at long horizons.
+  * Read disturb: every search pulse stresses the cells; accumulated reads
+    add ``read_disturb_s`` equivalent stress-seconds each, so a hot row ages
+    faster than a cold one.
+
+Both fault families are *physical, persistent* chip properties: the same
+elements stay stuck (``SAFMask``) and the same elements drift fastest
+(``DriftModel``) no matter what is later written.  Writing a row resets its
+drift clock (that is what a scrub/refresh pulse does —
+``repro.degradation``), but never its stuck elements or its drift exponents.
+``apply_saf`` remains the one-shot convenience wrapper (sample + apply).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
@@ -31,12 +41,63 @@ from .lut import CELL_0, CELL_1, CELL_MM, CELL_X
 __all__ = [
     "NonIdealSpec", "IDEAL", "SAFMask", "sample_saf", "apply_saf_mask",
     "apply_saf", "noisy_inputs", "CELL_TO_PAIR",
+    "DriftSpec", "DriftModel", "sample_drift",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """Temporal degradation law of one chip's resistive elements.
+
+    An element programmed at time ``t_w`` and read ``k`` times since has
+    accumulated equivalent stress time
+
+        t_eff = (t - t_w) + read_disturb_s * k
+
+    and its resistance has walked away from nominal by the factor
+
+        f = (1 + t_eff / t0) ** ν_elem  *  exp(t_eff / retention_tau_s)
+
+    LRS elements drift *up* (conductance loss, R *= f); HRS elements drift
+    *down* (R /= f ** hrs_drift_scale — LRS retention loss dominates in
+    ReRAM, so HRS drift is attenuated).  ν_elem is sampled once per element
+    per chip (``sample_drift``): ``|N(nu, nu_sigma)|`` — the chip's weakest
+    cells are persistent, exactly like its stuck elements.
+
+    nu: mean log-time drift exponent (0 disables the power-law term).
+    nu_sigma: per-element chip variability of the exponent.
+    t0: drift-law reference time [s].
+    retention_tau_s: exponential retention decay constant [s] (inf disables).
+    read_disturb_s: equivalent stress seconds added per read of the element.
+    hrs_drift_scale: attenuation of HRS drift relative to LRS drift.
+    """
+
+    nu: float = 0.0
+    nu_sigma: float = 0.0
+    t0: float = 1.0
+    retention_tau_s: float = math.inf
+    read_disturb_s: float = 0.0
+    hrs_drift_scale: float = 0.5
+
+    def __post_init__(self) -> None:
+        for f in ("nu", "nu_sigma", "read_disturb_s", "hrs_drift_scale"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be >= 0")
+        if self.t0 <= 0:
+            raise ValueError("t0 must be > 0")
+        if self.retention_tau_s <= 0:
+            raise ValueError("retention_tau_s must be > 0")
+
+    @property
+    def is_ideal(self) -> bool:
+        return (self.nu == 0 and self.nu_sigma == 0
+                and math.isinf(self.retention_tau_s))
+
+
+@dataclasses.dataclass(frozen=True)
 class NonIdealSpec:
-    """One object grouping the paper's three non-ideality mechanisms.
+    """One object grouping the paper's three non-ideality mechanisms plus
+    the temporal degradation law.
 
     Replaces the sprawling ``p_sa0/p_sa1/sa_sigma/sigma_in`` keyword lists
     that the inference entry points used to take (the flat keywords on
@@ -46,12 +107,14 @@ class NonIdealSpec:
         probabilities (Table I).
     sa_sigma: sense-amplifier V_ref manufacturing variability σ [V].
     sigma_in: input-encoding noise σ on normalized features.
+    drift: temporal drift/retention law (``DriftSpec``); None = stable cells.
     """
 
     p_sa0: float = 0.0
     p_sa1: float = 0.0
     sa_sigma: float = 0.0
     sigma_in: float = 0.0
+    drift: Optional[DriftSpec] = None
 
     def __post_init__(self) -> None:
         for f in ("p_sa0", "p_sa1", "sa_sigma", "sigma_in"):
@@ -59,15 +122,24 @@ class NonIdealSpec:
                 raise ValueError(f"{f} must be >= 0")
         if self.p_sa0 + self.p_sa1 > 1.0:
             raise ValueError("p_sa0 + p_sa1 must be <= 1")
+        if self.drift is not None and not isinstance(self.drift, DriftSpec):
+            raise TypeError(
+                f"drift must be a DriftSpec or None, got {type(self.drift)}"
+            )
 
     @property
     def is_ideal(self) -> bool:
         return (self.p_sa0 == 0 and self.p_sa1 == 0
-                and self.sa_sigma == 0 and self.sigma_in == 0)
+                and self.sa_sigma == 0 and self.sigma_in == 0
+                and not self.has_drift)
 
     @property
     def has_saf(self) -> bool:
         return self.p_sa0 > 0 or self.p_sa1 > 0
+
+    @property
+    def has_drift(self) -> bool:
+        return self.drift is not None and not self.drift.is_ideal
 
 
 IDEAL = NonIdealSpec()
@@ -197,6 +269,156 @@ def apply_saf(
         return cells.copy()
     rng = _require_rng(rng, "apply_saf")
     return apply_saf_mask(cells, sample_saf(cells.shape, p_sa0, p_sa1, rng))
+
+
+# ---------------------------------------------------------------------------
+# Temporal degradation: conductance drift / retention / read disturb
+# ---------------------------------------------------------------------------
+
+def _per_row(x, n_rows: int) -> np.ndarray:
+    """Broadcast a scalar or (rows,) vector to a (rows, 1) column for
+    element-grid arithmetic."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim == 0:
+        return np.full((n_rows, 1), float(a))
+    if a.shape != (n_rows,):
+        raise ValueError(
+            f"per-row quantity has shape {a.shape}, expected ({n_rows},) "
+            "or a scalar"
+        )
+    return a[:, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftModel:
+    """Persistent per-element drift state of one physical chip.
+
+    Two exponent grids of the cell-grid shape (one per resistive element),
+    sampled once per chip with ``sample_drift`` — the chip's fast-drifting
+    elements stay its fast-drifting elements across rewrites; only the
+    *stress clock* resets when a row is (re)programmed.
+
+    ``t_since_write`` / ``reads_since_write`` arguments are per-row (the
+    write/refresh granularity) — scalars or (rows,) vectors.
+    """
+
+    spec: DriftSpec
+    nu_r1: np.ndarray
+    nu_r2: np.ndarray
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.nu_r1.shape
+
+    def stress_time(self, t_since_write, reads_since_write,
+                    n_rows: Optional[int] = None) -> np.ndarray:
+        """(rows, 1) equivalent stress time: wall age + read-disturb
+        contribution (each read adds ``read_disturb_s`` stress seconds)."""
+        rows = self.shape[0] if n_rows is None else n_rows
+        t = _per_row(t_since_write, rows)
+        k = _per_row(reads_since_write, rows)
+        return np.maximum(t + self.spec.read_disturb_s * k, 0.0)
+
+    def growth(self, t_since_write, reads_since_write) -> tuple[np.ndarray,
+                                                                np.ndarray]:
+        """Per-element resistance walk factors (>= 1), one grid per element:
+        ``(1 + t_eff/t0)^ν * exp(t_eff/τ_ret)``."""
+        t_eff = self.stress_time(t_since_write, reads_since_write)
+        base = 1.0 + t_eff / self.spec.t0
+        ret = (np.exp(t_eff / self.spec.retention_tau_s)
+               if math.isfinite(self.spec.retention_tau_s) else 1.0)
+        return base ** self.nu_r1 * ret, base ** self.nu_r2 * ret
+
+    def resistances(
+        self, cells: np.ndarray, t_since_write, reads_since_write,
+        hw=None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Effective per-element resistances (R1, R2) of the programmed
+        grid after drift: LRS elements drift up by f, HRS elements down by
+        ``f ** hrs_drift_scale``."""
+        hw = hw or _default_hw()
+        cells = np.asarray(cells)
+        if cells.shape != self.shape:
+            raise ValueError(
+                f"cells shape {cells.shape} != drift grid {self.shape}"
+            )
+        f1, f2 = self.growth(t_since_write, reads_since_write)
+        r1_lrs = np.isin(cells, (CELL_1, CELL_MM))
+        r2_lrs = np.isin(cells, (CELL_0, CELL_MM))
+        g = self.spec.hrs_drift_scale
+        r1 = np.where(r1_lrs, hw.r_lrs * f1, hw.r_hrs / f1 ** g)
+        r2 = np.where(r2_lrs, hw.r_lrs * f2, hw.r_hrs / f2 ** g)
+        return r1, r2
+
+    def readout(
+        self, cells: np.ndarray, t_since_write, reads_since_write,
+        hw=None,
+    ) -> np.ndarray:
+        """Discrete cell states the sense path effectively sees: an element
+        whose drifted resistance crossed the LRS/HRS midpoint
+        ``sqrt(r_lrs * r_hrs)`` reads as the *other* state (retention
+        failure).  At t_eff = 0 this is the identity."""
+        hw = hw or _default_hw()
+        r1, r2 = self.resistances(cells, t_since_write, reads_since_write, hw)
+        mid = math.sqrt(hw.r_lrs * hw.r_hrs)
+        return _PAIR_TO_CELL[(r1 < mid).astype(int), (r2 < mid).astype(int)]
+
+    def cell_resistances(
+        self, cells: np.ndarray, t_since_write, reads_since_write,
+        hw=None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-cell effective resistance in the match and mismatch search
+        states — the input to ``core.energy.sensing_margins``.
+
+        On a match the searched branch runs through the cell's HRS-state
+        element (the ON transistor in series with it, the other branch
+        through the OFF transistor); on a mismatch through its LRS-state
+        element.  CELL_X / CELL_MM cells use the stored element roles
+        unchanged (both elements share a state, so the branch choice only
+        picks which drift sample applies)."""
+        hw = hw or _default_hw()
+        cells = np.asarray(cells)
+        r1, r2 = self.resistances(cells, t_since_write, reads_since_write, hw)
+        r1_lrs = np.isin(cells, (CELL_1, CELL_MM))
+        hrs_elem = np.where(r1_lrs, r2, r1)   # HRS-state element of the pair
+        lrs_elem = np.where(r1_lrs, r1, r2)   # LRS-state element of the pair
+        r_match = _par_np(hrs_elem + hw.r_on, lrs_elem + hw.r_off)
+        r_mismatch = _par_np(lrs_elem + hw.r_on, hrs_elem + hw.r_off)
+        return r_match, r_mismatch
+
+    def flip_threshold(self, hw=None) -> float:
+        """Walk factor at which an LRS element reads as HRS (and, scaled by
+        1/hrs_drift_scale, vice versa): ``sqrt(r_hrs / r_lrs)``."""
+        hw = hw or _default_hw()
+        return math.sqrt(hw.r_hrs / hw.r_lrs)
+
+
+def _par_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return a * b / (a + b)
+
+
+def _default_hw():
+    from .energy import DEFAULT_HW
+
+    return DEFAULT_HW
+
+
+def sample_drift(
+    shape: tuple[int, ...],
+    spec: DriftSpec,
+    rng: Optional[np.random.Generator] = None,
+) -> DriftModel:
+    """Sample one chip's persistent per-element drift exponents:
+    ``ν_elem = |N(nu, nu_sigma)|`` per resistive element (rng required
+    whenever nu_sigma > 0 — the fleet must not silently share one chip)."""
+    if spec.nu_sigma > 0:
+        rng = _require_rng(rng, "sample_drift")
+        nu_r1 = np.abs(rng.normal(spec.nu, spec.nu_sigma, shape))
+        nu_r2 = np.abs(rng.normal(spec.nu, spec.nu_sigma, shape))
+    else:
+        nu_r1 = np.full(shape, float(spec.nu))
+        nu_r2 = np.full(shape, float(spec.nu))
+    return DriftModel(spec=spec, nu_r1=nu_r1, nu_r2=nu_r2)
 
 
 def noisy_inputs(

@@ -9,9 +9,11 @@ dataset required at serving time.
 ``CircuitBreaker`` tracks the chip-health state machine the server drives:
 
     HEALTHY --canary below threshold--> DEGRADED
+    DEGRADED --drift scrub + refresh + canary re-vote ok--> REPAIRED
     DEGRADED --BIST + spare-row repair + canary re-vote ok--> REPAIRED
     DEGRADED/REPAIRED --repair insufficient, 'ref' engine canary ok--> FALLBACK
     otherwise --> FAILED   (still serving, loudly degraded)
+    REPAIRED --routine canary re-pass--> HEALTHY   (re-enters steady state)
 
 The breaker never opens the request path — a degraded chip keeps answering
 (the paper's whole point is graceful accuracy degradation); the state is
@@ -98,17 +100,20 @@ class CircuitBreaker:
     state: str = BreakerState.HEALTHY
     trips: int = 0
     last_accuracy: float = float("nan")
-    recovery: Optional[str] = None     # 'repair' | 'fallback_ref'
+    recovery: Optional[str] = None     # 'scrub' | 'repair' | 'fallback_ref'
 
     def observe(self, accuracy: float) -> bool:
         """Record a routine canary run; True iff the breaker trips (healthy
         or recovered state and accuracy below threshold)."""
         self.last_accuracy = accuracy
         if accuracy >= self.threshold:
-            if self.state == BreakerState.HEALTHY:
-                return False
-            if self.state in (BreakerState.DEGRADED, BreakerState.FAILED):
-                # chip spontaneously back above threshold
+            if self.state in (BreakerState.DEGRADED, BreakerState.FAILED,
+                              BreakerState.REPAIRED):
+                # DEGRADED/FAILED: chip spontaneously back above threshold;
+                # REPAIRED: a routine canary re-passed after recovery, so the
+                # chip re-enters steady state.  FALLBACK stays sticky — its
+                # canaries pass *on the fallback engine*, which says nothing
+                # about the primary path.
                 self.state = BreakerState.HEALTHY
             return False
         if self.state in (BreakerState.HEALTHY, BreakerState.REPAIRED,
@@ -119,10 +124,14 @@ class CircuitBreaker:
         return self.state == BreakerState.DEGRADED
 
     def recovered(self, how: str, accuracy: float) -> None:
+        """A recovery rung re-passed the canary: 'scrub' (drift refresh) and
+        'repair' (spare-row remap) restore full-fidelity serving (REPAIRED);
+        anything else is a degraded-but-serving fallback (FALLBACK)."""
         self.last_accuracy = accuracy
         self.recovery = how
         self.state = (
-            BreakerState.REPAIRED if how == "repair" else BreakerState.FALLBACK
+            BreakerState.REPAIRED if how in ("scrub", "repair")
+            else BreakerState.FALLBACK
         )
 
     def failed(self, accuracy: float) -> None:

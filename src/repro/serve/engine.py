@@ -29,6 +29,17 @@ the budget), and a periodic canary that trips a circuit breaker driving the
 degradation ladder degraded -> repair -> re-vote -> engine fallback to
 'ref'.  Every submitted Future resolves — with a result or a typed error.
 
+Temporal degradation (``repro.degradation``): with ``NonIdealSpec.drift``
+set, the chip's conductances walk on a *virtual clock* (advanced per batch
+via ``ServeConfig.time_per_batch_s`` or explicitly via ``advance_time``) and
+the served cell grid is re-derived from the drifted readout at maintenance
+epochs.  A ``ScrubScheduler`` tracks per-row write times / read counts and a
+periodic maintenance pass (``scrub_every_batches``) refreshes out-of-margin
+rows through the lifecycle ``WritePlan`` machinery — refresh energy lands in
+the metrics and the pulses debit the (optionally shared) ``WearTracker``
+endurance ledger.  The circuit-breaker ladder gains a first rung: drifted ->
+scrub + refresh -> canary re-vote, before BIST+repair.
+
 Forest mode: constructed with a ``repro.forest.CompiledForest`` the server
 shards the batch path across TCAM banks — per-group batched kernels
 (``kernels.banked``) pipelined via jax async dispatch, per-bank survivors
@@ -63,11 +74,15 @@ from ..core.energy import DEFAULT_HW, HardwareParams, f_max, forest_figures
 from ..core.lut import CELL_1, CELL_X
 from ..core.nonideal import (
     IDEAL,
+    DriftModel,
     NonIdealSpec,
     SAFMask,
     apply_saf_mask,
+    sample_drift,
     sample_saf,
 )
+from ..degradation import ScrubPolicy, ScrubReport, ScrubScheduler, \
+    layout_margins
 from ..kernels.banked import tcam_match_banked
 from ..kernels.ops import _finalize, sa_kmax, select_engine, tcam_match
 from ..reliability.bist import BistReport, run_bist
@@ -105,6 +120,13 @@ class ServeConfig:
     # -- lifecycle ----------------------------------------------------------
     compile_cache_size: Optional[int] = None  # LRU bound on compiled batch
                                               # fns (None = unbounded)
+    # -- temporal degradation (drift scrub & refresh) -----------------------
+    scrub_every_batches: int = 0       # 0 disables the maintenance pass
+    scrub_policy: str = "margin"       # 'margin' | 'periodic'
+    scrub_margin_v: float = 0.15       # refresh rows at/below this margin [V]
+    scrub_period_s: float = 3600.0     # periodic policy: refresh age [s]
+    scrub_max_rows: Optional[int] = None   # rows per pass (None = unbounded)
+    time_per_batch_s: float = 0.0      # virtual seconds of drift per batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +219,7 @@ class TCAMServer:
         config: ServeConfig = ServeConfig(),
         rng: Optional[np.random.Generator] = None,
         clock: Callable[[], float] = time.perf_counter,
+        wear=None,
     ) -> None:
         self._hw = hw
         self._config = config
@@ -204,11 +227,22 @@ class TCAMServer:
         self._clock = clock
         self._rng = rng or np.random.default_rng(0)
         self.metrics_store = ServeMetrics()
+        # endurance ledger shared with the lifecycle subsystem: refresh
+        # pulses and redeploy pulses debit the same per-cell counts
+        self._wear = wear
+        self._drift: Optional[DriftModel] = None
+        self._scrub: Optional[ScrubScheduler] = None
+        self._batches_since_scrub = 0
 
         # multi-bank (forest) mode: a CompiledForest shards the serving path
         # across banks (duck-typed to keep repro.forest an optional import)
         self._forest = compiled if hasattr(compiled, "banks") else None
         if self._forest is not None:
+            if nonideal.has_drift:
+                raise NotImplementedError(
+                    "drift modelling is single-model only for now; model "
+                    "bank drift with per-bank TCAMServer instances"
+                )
             self._init_forest_state(nonideal)
         else:
             self._init_single_state(compiled, nonideal)
@@ -238,7 +272,7 @@ class TCAMServer:
         self._repair_reports: list[RepairReport] = []
         # test/chaos seam: called with the batch's feature matrix right
         # before kernel dispatch; raising simulates a transient device fault
-        # (renamed from compute_fault_hook; the old name stays as an alias)
+        # (renamed from compute_fault_hook; the old name now raises)
         self.fault_injection_hook: Optional[Callable[[np.ndarray], None]] = None
 
         self._batcher = AdaptiveBatcher(
@@ -280,6 +314,32 @@ class TCAMServer:
             faulted[:, 1 + layout.width:] = CELL_X
             layout = dataclasses.replace(layout, cells=faulted)
         self._layout = layout
+        # zero-drift served layout: the grid the chip would read back right
+        # after programming; under drift the live self._layout is re-derived
+        # from this base at maintenance epochs
+        self._base_layout = layout
+        if nonideal.has_drift:
+            self._drift = sample_drift(
+                self._intent.shape, nonideal.drift, self._rng
+            )
+            if self._config.scrub_policy not in ("margin", "periodic"):
+                raise ValueError(
+                    f"unknown scrub_policy {self._config.scrub_policy!r}"
+                )
+            if self._wear is None:
+                from ..lifecycle.wear import WearTracker
+                self._wear = WearTracker(self._intent.shape, hw=self._hw)
+            self._scrub = ScrubScheduler(
+                self._intent.shape[0],
+                policy=ScrubPolicy(
+                    kind=self._config.scrub_policy,
+                    margin_v=self._config.scrub_margin_v,
+                    period_s=self._config.scrub_period_s,
+                    max_rows=self._config.scrub_max_rows,
+                ),
+                wear=self._wear,
+                hw=self._hw,
+            )
         self._ideal_cells = np.array(compiled.layout.cells, copy=True)
         self._kmax: Optional[np.ndarray] = None
         if nonideal.sa_sigma > 0:
@@ -625,6 +685,7 @@ class TCAMServer:
                     raise err
                 break
         self._maybe_canary()
+        self._maybe_scrub()
 
     def _process_inner(self, batch: list, deadline_flush: bool) -> None:
         with self._model_lock:
@@ -654,6 +715,11 @@ class TCAMServer:
         out = fn(jnp.asarray(xpad))
         jax.block_until_ready(out)
         compute_s = self._clock() - t_form
+        if self._scrub is not None:
+            # this batch was served by the pre-advance chip state; the clock
+            # ticks and the read-disturb counters accumulate afterwards
+            self._scrub.advance(self._config.time_per_batch_s)
+            self._scrub.note_reads(n)
 
         preds, survivors, nsurv, active = (np.asarray(o)[:n] for o in out)
         # shadow deployment: mirror this (post-noise) batch to the staged
@@ -786,8 +852,8 @@ class TCAMServer:
             self._cond.notify_all()
 
     # -- lifecycle: shadow deployment, promotion, rollback ------------------
-    _SWAP_ATTRS = ("_lut", "_intent", "_saf_mask", "_layout", "_ideal_cells",
-                   "_kmax", "engine", "cache", "_canary")
+    _SWAP_ATTRS = ("_lut", "_intent", "_saf_mask", "_layout", "_base_layout",
+                   "_ideal_cells", "_kmax", "engine", "cache", "_canary")
 
     def _snapshot_model(self) -> dict:
         return {a: getattr(self, a) for a in self._SWAP_ATTRS}
@@ -995,12 +1061,18 @@ class TCAMServer:
             self._intent = cand.intent
             self._saf_mask = cand.saf_mask
             self._layout = cand.layout
+            self._base_layout = cand.layout
             self._ideal_cells = cand.ideal_cells
             self._kmax = cand.kmax
             self.engine = cand.engine
             self.cache = cand.cache
             self._canary = cand.canary
             self._candidate = None
+            if self._scrub is not None:
+                # the promotion reprogrammed the whole array: every row's
+                # drift clock restarts at the freshly-written state
+                self._scrub.note_write()
+                self._refresh_served_layout()
             self.metrics_store.on_promotion(True)
             if cand.canary is not None:
                 self.metrics_store.on_canary(
@@ -1066,14 +1138,29 @@ class TCAMServer:
             )
         if defects is None:
             defects = self.self_test()
+        # repair is a *programming* operation: it diffs and rewrites against
+        # the base (zero-drift) grid.  Detection stayed honest — self_test
+        # probed the drifted served grid, so retention-flipped rows can land
+        # here too; the scrub rung runs first in _recover to avoid burning
+        # spares on rows a refresh would have fixed.
         new_layout, new_intent, report = repair_layout(
-            self._layout, self._intent, self._saf_mask,
+            self._base_layout, self._intent, self._saf_mask,
             defects.defective_rows, priority=priority,
         )
+        self._base_layout = new_layout
         self._layout, self._intent = new_layout, new_intent
         self._repair_reports.append(report)
         self.metrics_store.on_repair(report.rows_repaired)
-        self._rebuild_compute()
+        if self._scrub is not None:
+            # the spares just written + the decoder-disabled originals were
+            # all physically programmed: their drift clocks restart
+            written = list(report.assignments.values()) + \
+                list(np.asarray(report.blocked_rows).ravel())
+            if written:
+                self._scrub.note_write(written)
+            self._refresh_served_layout(force=True)
+        else:
+            self._rebuild_compute()
         return report
 
     def _repair_forest(self, defects) -> list:
@@ -1163,10 +1250,20 @@ class TCAMServer:
             self._recover()
 
     def _recover(self) -> None:
-        """Degradation ladder: repair the chip, re-vote the canary; if still
-        failing, fall back to the 'ref' engine; else mark FAILED (the server
-        keeps answering — degradation stays graceful)."""
+        """Degradation ladder: scrub drifted rows, then repair the chip,
+        re-voting the canary after each rung; if still failing, fall back to
+        the 'ref' engine; else mark FAILED (the server keeps answering —
+        degradation stays graceful)."""
         thr = self._config.canary_threshold
+        if self._scrub is not None:
+            # first rung: a full refresh undoes retention/drift damage
+            # without consuming spare rows — cheaper than repair when the
+            # trip was temporal, a no-op-equivalent when it was stuck-at
+            self.scrub_now(force=True)
+            acc = self.run_canary()
+            if acc >= thr:
+                self.breaker.recovered("scrub", acc)
+                return
         if self._config.auto_repair and self._saf_mask is not None:
             self.repair()
             acc = self.run_canary()
@@ -1181,6 +1278,125 @@ class TCAMServer:
                 self.breaker.recovered("fallback_ref", acc)
                 return
         self.breaker.failed(self.breaker.last_accuracy)
+
+    # -- temporal degradation: drift clock, margins, scrub passes -----------
+    @property
+    def drift_enabled(self) -> bool:
+        """True when the chip was constructed with a drift model."""
+        return self._scrub is not None
+
+    def _require_drift(self) -> ScrubScheduler:
+        if self._scrub is None:
+            raise RuntimeError(
+                "drift modelling disabled: construct the server with "
+                "NonIdealSpec(drift=DriftSpec(...))"
+            )
+        return self._scrub
+
+    def _blocked_rows(self) -> np.ndarray:
+        """Decoder-disabled rows from every repair so far: they carry no
+        live content, so refreshing them would waste endurance."""
+        if not self._repair_reports:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate([
+            np.asarray(r.blocked_rows, dtype=np.int64).ravel()
+            for r in self._repair_reports
+        ] + [np.zeros(0, np.int64)]))
+
+    def _compute_margins(self):
+        return layout_margins(
+            self._base_layout, self._drift,
+            self._scrub.ages(), self._scrub.reads, self._hw,
+        )
+
+    def _refresh_served_layout(self, *, force: bool = False) -> None:
+        """Re-derive the served grid: base (programmed) layout -> drift
+        readout at the rows' current stress -> stuck elements re-pinned ->
+        padding columns masked.  The compile cache is only re-keyed when the
+        readout grid actually changed (``force`` bypasses the comparison,
+        e.g. right after a repair replaced the base layout itself)."""
+        base = self._base_layout
+        cells = base.cells
+        if self._drift is not None and self._scrub is not None:
+            cells = self._drift.readout(
+                base.cells, self._scrub.ages(), self._scrub.reads, self._hw
+            )
+            if self._saf_mask is not None:
+                cells = apply_saf_mask(cells, self._saf_mask)
+            cells[:, 1 + base.width:] = CELL_X
+        if not force and np.array_equal(cells, self._layout.cells):
+            return
+        self._layout = dataclasses.replace(base, cells=cells)
+        self._rebuild_compute()
+
+    def advance_time(self, dt: float) -> float:
+        """Advance the drift virtual clock by ``dt`` seconds and re-derive
+        the served grid (accelerated-aging campaigns drive this directly;
+        live serving ticks it via ``ServeConfig.time_per_batch_s``).
+        Returns the new virtual now."""
+        with self._model_lock:
+            sch = self._require_drift()
+            now = sch.advance(dt)
+            self._refresh_served_layout()
+        return now
+
+    def margins(self):
+        """Per-row ``SenseMargins`` of the live chip at its current drift
+        state (worst case over column divisions)."""
+        with self._model_lock:
+            self._require_drift()
+            return self._compute_margins()
+
+    def scrub_now(self, *, force: bool = False) -> ScrubReport:
+        """One scrub pass: policy-selected rows (``force=True``: every
+        non-blocked row) are refreshed through the lifecycle ``WritePlan``
+        machinery — pulses debit the wear ledger, energy/time land in the
+        metrics — and the served grid is re-derived.
+
+        Runs under the model lock, so a pass lands entirely between batches:
+        in-flight requests are never dropped or double-resolved."""
+        with self._model_lock:
+            sch = self._require_drift()
+            base = self._base_layout
+            if force:
+                plan, report = sch.scrub(
+                    base.cells, used=1 + base.width,
+                    blocked=self._blocked_rows(),
+                    force_rows=np.arange(sch.n_rows),
+                )
+            else:
+                margins = (self._compute_margins().margin
+                           if sch.policy.kind == "margin" else None)
+                plan, report = sch.scrub(
+                    base.cells, margins, used=1 + base.width,
+                    blocked=self._blocked_rows(),
+                )
+            self.metrics_store.on_scrub(
+                report.n_refreshed,
+                report.figures["energy_j"],
+                report.figures["pulses"],
+            )
+            self._refresh_served_layout()
+        return report
+
+    def _maybe_scrub(self) -> None:
+        """Background maintenance: every ``scrub_every_batches`` processed
+        batches, run one policy-driven scrub pass."""
+        if self._scrub is None or self._config.scrub_every_batches <= 0:
+            return
+        self._batches_since_scrub += 1
+        if self._batches_since_scrub < self._config.scrub_every_batches:
+            return
+        self._batches_since_scrub = 0
+        self.scrub_now()
+
+    def _degradation_health(self) -> dict:
+        snap = self._scrub.snapshot()
+        snap["margins"] = self._compute_margins().summary()
+        snap["blocked_rows"] = int(self._blocked_rows().size)
+        if self._wear is not None:
+            snap["wear"] = self._wear.snapshot()
+        return snap
 
     def health(self) -> dict:
         """Chip-health snapshot: breaker state, canary, spares, repairs."""
@@ -1221,20 +1437,28 @@ class TCAMServer:
                 self._repair_reports[-1].summary()
                 if self._repair_reports else None
             ),
+            "degradation": (
+                self._degradation_health() if self._scrub is not None
+                else None
+            ),
         }
 
     # -- convenience & lifecycle -------------------------------------------
     @property
-    def compute_fault_hook(self) -> Optional[Callable[[np.ndarray], None]]:
-        """Deprecated alias of ``fault_injection_hook`` (renamed; see the
-        README migration notes)."""
-        return self.fault_injection_hook
+    def compute_fault_hook(self):
+        """Removed — the one-release alias expired (README migration
+        notes)."""
+        raise AttributeError(
+            "TCAMServer.compute_fault_hook was removed; use "
+            "TCAMServer.fault_injection_hook instead"
+        )
 
     @compute_fault_hook.setter
-    def compute_fault_hook(
-        self, fn: Optional[Callable[[np.ndarray], None]]
-    ) -> None:
-        self.fault_injection_hook = fn
+    def compute_fault_hook(self, fn) -> None:
+        raise AttributeError(
+            "TCAMServer.compute_fault_hook was removed; use "
+            "TCAMServer.fault_injection_hook instead"
+        )
 
     def serve(self, X: np.ndarray) -> list[RequestResult]:
         """Submit every row of X, wait for completion, return results in

@@ -94,6 +94,11 @@ class ServeMetrics:
         self.repairs = 0              # repair attempts (BIST + spare remap)
         self.rows_repaired = 0
         self.last_canary_acc = float("nan")
+        # -- degradation (drift scrub / refresh) -------------------------------
+        self.scrub_passes = 0         # maintenance passes executed
+        self.rows_scrubbed = 0        # Σ rows refreshed across passes
+        self.scrub_energy_j = 0.0     # Σ modelled refresh write energy
+        self.scrub_pulses = 0         # Σ refresh program pulses (endurance)
         # -- lifecycle (shadow deployment / promotion) -------------------------
         self.stages = 0               # candidates staged into the shadow slot
         self.shadow_batches = 0       # live batches mirrored to the candidate
@@ -140,6 +145,13 @@ class ServeMetrics:
         with self._lock:
             self.repairs += 1
             self.rows_repaired += rows
+
+    def on_scrub(self, rows: int, energy_j: float, pulses: int) -> None:
+        with self._lock:
+            self.scrub_passes += 1
+            self.rows_scrubbed += rows
+            self.scrub_energy_j += energy_j
+            self.scrub_pulses += pulses
 
     def on_stage(self) -> None:
         with self._lock:
@@ -211,6 +223,12 @@ class ServeMetrics:
                     "repairs": self.repairs,
                     "rows_repaired": self.rows_repaired,
                     "last_canary_acc": self.last_canary_acc,
+                },
+                "degradation": {
+                    "scrub_passes": self.scrub_passes,
+                    "rows_scrubbed": self.rows_scrubbed,
+                    "scrub_energy_j": self.scrub_energy_j,
+                    "scrub_pulses": self.scrub_pulses,
                 },
                 "lifecycle": {
                     "stages": self.stages,

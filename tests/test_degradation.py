@@ -1,0 +1,333 @@
+"""Temporal degradation: the drift/retention model, sensing-margin analyzer,
+scrub-and-refresh scheduler, and the serving-engine maintenance integration
+(virtual drift clock, margin-policy scrubs, breaker scrub rung)."""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DT2CAM, NonIdealSpec
+from repro.core.energy import (DEFAULT_HW, mismatch_probability,
+                               sensing_margins)
+from repro.core.lut import CELL_0, CELL_1, CELL_MM, CELL_X
+from repro.core.nonideal import DriftSpec, sample_drift
+from repro.degradation import (ScrubPolicy, ScrubScheduler, layout_margins,
+                               plan_refresh)
+from repro.dt import load_split
+from repro.lifecycle.wear import WearTracker
+from repro.serve import ServeConfig, TCAMServer
+
+DRIFT = DriftSpec(nu=0.05, nu_sigma=0.02, retention_tau_s=2e6)
+
+
+@pytest.fixture(scope="module")
+def iris_model():
+    Xtr, ytr, Xte, yte = load_split("iris")
+    return DT2CAM(s=16, max_depth=5).fit(Xtr, ytr), Xte, yte
+
+
+def _grid():
+    """A small grid exercising all four cell states."""
+    return np.array([[CELL_0, CELL_1, CELL_X],
+                     [CELL_1, CELL_MM, CELL_0],
+                     [CELL_X, CELL_0, CELL_1]], np.int8)
+
+
+# --------------------------------------------------------------------------
+# drift model
+# --------------------------------------------------------------------------
+def test_drift_spec_validation_and_ideality():
+    assert DriftSpec().is_ideal
+    assert not DRIFT.is_ideal
+    assert DriftSpec(read_disturb_s=1.0).is_ideal   # no law to accumulate
+    for bad in (dict(nu=-0.1), dict(nu_sigma=-1.0), dict(t0=0.0),
+                dict(retention_tau_s=0.0), dict(read_disturb_s=-1.0),
+                dict(hrs_drift_scale=-0.5)):
+        with pytest.raises(ValueError):
+            DriftSpec(**bad)
+    assert not NonIdealSpec().has_drift
+    assert not NonIdealSpec(drift=DriftSpec()).has_drift   # ideal law
+    assert NonIdealSpec(drift=DRIFT).has_drift
+    assert not NonIdealSpec(drift=DRIFT).is_ideal
+    with pytest.raises(TypeError):
+        NonIdealSpec(drift=0.1)
+
+
+def test_drift_zero_stress_is_identity():
+    cells = _grid()
+    m = sample_drift(cells.shape, DRIFT, np.random.default_rng(0))
+    f1, f2 = m.growth(0.0, 0)
+    assert np.allclose(f1, 1.0) and np.allclose(f2, 1.0)
+    assert (m.readout(cells, 0.0, 0) == cells).all()
+
+
+def test_drift_growth_monotone_and_retention_flips_to_dont_care():
+    cells = _grid()
+    spec = DriftSpec(nu=0.0, retention_tau_s=2e6)      # pure retention decay
+    m = sample_drift(cells.shape, spec)
+    f_a, _ = m.growth(1e5, 0)
+    f_b, _ = m.growth(1e6, 0)
+    assert (f_b > f_a).all() and (f_a > 1.0).all()
+    # past the LRS flip threshold (but short of the attenuated HRS flip) a
+    # determinate cell's LRS element reads HRS -> the cell reads as CELL_X,
+    # i.e. a silent missed-match, which is exactly what scrubbing prevents
+    t = 2e6 * math.log(2 * m.flip_threshold())
+    out = m.readout(cells, t, 0)
+    det = np.isin(cells, (CELL_0, CELL_1))
+    assert (out[det] == CELL_X).all()
+    assert (out[cells == CELL_X] == CELL_X).all()
+
+
+def test_drift_read_disturb_adds_stress():
+    spec = DriftSpec(nu=0.1, read_disturb_s=0.5)
+    m = sample_drift((2, 3), spec)
+    assert np.allclose(m.stress_time(0.0, 100), 50.0)
+    assert np.allclose(m.stress_time(10.0, [100, 0]),
+                       np.array([[60.0], [10.0]]))
+    f_idle, _ = m.growth(10.0, 0)
+    f_read, _ = m.growth(10.0, 100)
+    assert (f_read > f_idle).all()
+
+
+def test_sample_drift_seeded_and_rng_required():
+    a = sample_drift((4, 4), DRIFT, np.random.default_rng(7))
+    b = sample_drift((4, 4), DRIFT, np.random.default_rng(7))
+    assert (a.nu_r1 == b.nu_r1).all() and (a.nu_r2 == b.nu_r2).all()
+    assert (a.nu_r1 >= 0).all()
+    with pytest.raises(TypeError, match="rng"):
+        sample_drift((4, 4), DRIFT)                    # nu_sigma > 0
+    c = sample_drift((4, 4), DriftSpec(nu=0.05))       # deterministic law
+    assert (c.nu_r1 == 0.05).all()
+
+
+# --------------------------------------------------------------------------
+# sensing margins
+# --------------------------------------------------------------------------
+def test_sensing_margins_ideal_grid_positive():
+    hw = DEFAULT_HW
+    rows, cols, s = 4, 8, 4
+    r_match = np.full((rows, cols), hw.r_cell_match)
+    r_mismatch = np.full((rows, cols), hw.r_cell_mismatch)
+    sm = sensing_margins(r_match, r_mismatch, s=s, used=cols, hw=hw)
+    assert sm.margin_match.shape == (rows,)
+    assert (sm.margin > 0).all()
+    # trimmed references sit midway between full-match and 1-mismatch
+    assert np.allclose(sm.margin_match, sm.margin_mismatch)
+    assert sm.summary()["rows_negative"] == 0
+    # HRS drifting down leaks the matching line -> match margin erodes;
+    # LRS drifting up weakens the mismatch discharge -> mismatch margin erodes
+    leaky = sensing_margins(r_match / 3.0, r_mismatch, s=s, used=cols, hw=hw)
+    assert (leaky.margin_match < sm.margin_match).all()
+    weak = sensing_margins(r_match, r_mismatch * 3.0, s=s, used=cols, hw=hw)
+    assert (weak.margin_mismatch < sm.margin_mismatch).all()
+    with pytest.raises(ValueError):
+        sensing_margins(r_match, r_mismatch[:, :4], s=s, used=cols)
+
+
+def test_mismatch_probability_limits():
+    m = np.array([-0.2, 0.0, 0.2])
+    assert (mismatch_probability(m, 0.0) == [1.0, 0.5, 0.0]).all()
+    p = mismatch_probability(m, 0.05)
+    assert p[0] > 0.99 and p[2] < 0.01
+    assert p[1] == pytest.approx(0.5)
+    assert np.allclose(p + mismatch_probability(-m, 0.05), 1.0)
+    with pytest.raises(ValueError):
+        mismatch_probability(m, -1.0)
+
+
+# --------------------------------------------------------------------------
+# refresh plans + scheduler
+# --------------------------------------------------------------------------
+def test_plan_refresh_pulse_accounting_and_identity():
+    cells = _grid()
+    plan = plan_refresh(cells, [0, 2], used=3)
+    assert plan.kind == "refresh"
+    # one reinforcing pulse per resistive element: 2 per cell, 3 cells/row
+    assert plan.n_set + plan.n_reset == 2 * 2 * 3
+    assert plan.n_pulses == plan.n_set + plan.n_reset
+    assert (plan.old == plan.new).all()                # refresh changes nothing
+    assert (plan.apply(cells) == plan.apply(plan.apply(cells))).all()
+    figs = plan.figures(DEFAULT_HW)
+    assert figs["energy_j"] > 0 and figs["pulses"] == plan.n_pulses
+    assert plan.rows_touched == 2
+    assert sorted(np.unique(plan.rows).tolist()) == [0, 2]
+    with pytest.raises(ValueError):
+        plan_refresh(cells, [5])
+
+
+def test_scrub_scheduler_margin_policy_selection():
+    wear = WearTracker((6, 3))
+    sch = ScrubScheduler(
+        6, policy=ScrubPolicy(kind="margin", margin_v=0.15, max_rows=2),
+        wear=wear,
+    )
+    margins = np.array([0.5, 0.10, 0.05, 0.2, -0.1, 0.12])
+    assert sch.due(margins, blocked=()).tolist() == [4, 2]  # worst-first, cap
+    assert sch.due(margins, blocked=[2]).tolist() == [4, 1]
+    cells = np.full((6, 3), CELL_1, np.int8)
+    sch.advance(100.0)
+    plan, report = sch.scrub(cells, margins, used=3, blocked=[2])
+    assert report.rows_due == 4                       # policy wanted 4 rows
+    assert report.rows_refreshed.tolist() == [4, 1]   # blocked + capped
+    assert set(report.rows_skipped.tolist()) == {2, 5}
+    assert report.margin_min_v == pytest.approx(-0.1)
+    # refreshed rows' drift clocks restart; others keep aging
+    ages = sch.ages()
+    assert ages[4] == ages[1] == 0.0 and ages[0] == 100.0
+    # the shared endurance ledger saw exactly the plan's pulses
+    assert wear.total_pulses == plan.n_pulses == report.figures["pulses"]
+    snap = sch.snapshot()
+    assert snap["scrub_passes"] == 1 and snap["rows_refreshed_total"] == 2
+    assert snap["refresh_pulses"] == plan.n_pulses
+
+
+def test_scrub_scheduler_periodic_policy_and_forced():
+    sch = ScrubScheduler(4, policy=ScrubPolicy(kind="periodic", period_s=100))
+    sch.advance(100.0)
+    sch.note_write([0])
+    sch.advance(50.0)
+    assert sch.due().tolist() == [1, 2, 3]            # oldest first, 0 fresh
+    cells = np.full((4, 2), CELL_0, np.int8)
+    _, report = sch.scrub(cells, force_rows=[0, 1], used=2)
+    assert report.policy == "forced"
+    assert report.rows_refreshed.tolist() == [0, 1]
+    sch.note_reads(5)
+    sch.note_reads(3, rows=[2])
+    assert sch.reads.tolist() == [5, 5, 8, 5]
+    assert sch.snapshot()["max_reads"] == 8
+
+
+def test_scrub_scheduler_validation():
+    with pytest.raises(ValueError):
+        ScrubPolicy(kind="eager")
+    with pytest.raises(ValueError):
+        ScrubPolicy(period_s=0.0)
+    with pytest.raises(ValueError):
+        ScrubPolicy(max_rows=0)
+    with pytest.raises(ValueError):
+        ScrubScheduler(0)
+    sch = ScrubScheduler(3)
+    with pytest.raises(ValueError):
+        sch.advance(-1.0)
+    with pytest.raises(ValueError):
+        sch.due()                                     # margin policy, no margins
+    with pytest.raises(ValueError):
+        sch.due(np.zeros(2))                          # wrong margins shape
+
+
+def test_layout_margins_monotone_in_drift(iris_model):
+    m, _, _ = iris_model
+    lay = m.compiled.layout
+    drift = sample_drift(lay.cells.shape, DRIFT, np.random.default_rng(0))
+    mins = [float(layout_margins(lay, drift, t, 0).margin.min())
+            for t in (0.0, 1e5, 1e6, 1e7)]
+    assert mins == sorted(mins, reverse=True)         # margins only erode
+    assert mins[0] > 0 > mins[-1]                     # fresh ok, aged broken
+
+
+# --------------------------------------------------------------------------
+# serving integration
+# --------------------------------------------------------------------------
+def _drift_server(m, **cfg_kw):
+    kw = dict(background=False, max_batch=16, engine="ref")
+    kw.update(cfg_kw)
+    return TCAMServer(m.compiled, nonideal=NonIdealSpec(drift=DRIFT),
+                      config=ServeConfig(**kw),
+                      rng=np.random.default_rng(0))
+
+
+def _acc(srv, X, y):
+    preds = np.array([r.prediction for r in srv.serve(X)])
+    return float((preds == y).mean())
+
+
+def test_server_drift_collapse_and_scrub_restores(iris_model):
+    m, Xte, yte = iris_model
+    srv = _drift_server(m)
+    assert srv.drift_enabled
+    fresh = _acc(srv, Xte, yte)
+    srv.advance_time(3e7)                             # deep into retention loss
+    aged = _acc(srv, Xte, yte)
+    assert aged < fresh - 0.2
+    assert srv.margins().summary()["rows_negative"] > 0
+    report = srv.scrub_now()
+    assert report.n_refreshed > 0
+    assert _acc(srv, Xte, yte) == pytest.approx(fresh)
+    deg = srv.metrics()["degradation"]
+    assert deg["scrub_passes"] == 1 and deg["rows_scrubbed"] > 0
+    assert deg["scrub_energy_j"] > 0
+    health = srv.health()["degradation"]
+    # refresh pulses land in the shared endurance ledger too
+    assert health["wear"]["total_pulses"] == deg["scrub_pulses"] > 0
+    assert health["margins"]["rows_negative"] == 0    # post-scrub
+    srv.close()
+
+
+def test_server_without_drift_rejects_maintenance(iris_model):
+    m, _, _ = iris_model
+    srv = TCAMServer(m.compiled, config=ServeConfig(background=False))
+    assert not srv.drift_enabled
+    assert srv.health()["degradation"] is None
+    for call in (lambda: srv.advance_time(1.0), srv.margins, srv.scrub_now):
+        with pytest.raises(RuntimeError, match="NonIdealSpec"):
+            call()
+    srv.close()
+
+
+def test_server_batch_driven_maintenance(iris_model):
+    m, Xte, _ = iris_model
+    srv = _drift_server(
+        m, scrub_every_batches=1, scrub_policy="periodic",
+        scrub_period_s=1.5e6, time_per_batch_s=1e6,
+    )
+    for _ in range(4):                                # 4 batches = 4e6 virtual s
+        srv.serve(Xte[:8])
+    deg = srv.metrics()["degradation"]
+    assert deg["scrub_passes"] >= 1 and deg["rows_scrubbed"] > 0
+    snap = srv.health()["degradation"]
+    assert snap["now_s"] == pytest.approx(4e6)
+    assert snap["max_age_s"] < 4e6                    # refreshes happened
+    srv.close()
+
+
+def test_breaker_scrub_rung_and_reentry(iris_model):
+    """Drifted chip -> canary trip -> scrub rung recovers (REPAIRED, no
+    spare-row repair consumed) -> next routine canary re-enters HEALTHY."""
+    m, Xte, _ = iris_model
+    srv = _drift_server(m, canary_every_batches=1, canary_size=32)
+    srv.advance_time(3e7)
+    srv.serve(Xte[:8])                                # trips + recovers inline
+    h = srv.health()
+    assert h["breaker"]["recovery"] == "scrub"
+    assert h["repair_attempts"] == 0                  # scrub rung was enough
+    assert srv.metrics()["degradation"]["scrub_passes"] >= 1
+    srv.serve(Xte[:8])                                # routine canary re-passes
+    assert srv.health()["state"] == "healthy"
+    srv.close()
+
+
+def test_scrub_never_drops_inflight_requests(iris_model):
+    """Chaos-style: a scrub storm concurrent with a live request stream must
+    never drop or double-resolve a future."""
+    m, Xte, _ = iris_model
+    srv = _drift_server(m, background=True)
+    stop = threading.Event()
+
+    def scrubber():
+        while not stop.is_set():
+            srv.advance_time(5e5)
+            srv.scrub_now(force=True)
+
+    th = threading.Thread(target=scrubber, daemon=True)
+    th.start()
+    try:
+        futs = [srv.submit(Xte[i % len(Xte)]) for i in range(64)]
+        srv.drain(timeout=60)
+    finally:
+        stop.set()
+        th.join(timeout=30)
+    assert all(f.done() and f.exception() is None for f in futs)
+    assert srv.metrics()["requests_served"] == 64
+    assert srv.metrics()["degradation"]["scrub_passes"] > 0
+    srv.close()

@@ -261,6 +261,34 @@ def test_breaker_state_machine():
     assert snap["trips"] == 2 and snap["last_accuracy"] == 0.95
 
 
+def test_breaker_recovery_reentry_transitions():
+    """Full recovery path re-enters steady state: FAILED -> repaired ->
+    routine canary re-pass -> HEALTHY (and the same for scrub recovery),
+    while the fallback engine stays sticky."""
+    b = CircuitBreaker(threshold=0.9)
+    assert b.observe(0.5) and b.state == BreakerState.DEGRADED
+    b.failed(0.2)
+    assert b.state == BreakerState.FAILED
+    b.recovered("repair", 0.95)               # late repair out of FAILED
+    assert b.state == BreakerState.REPAIRED and b.recovery == "repair"
+    assert not b.observe(0.96)                # routine canary re-passes
+    assert b.state == BreakerState.HEALTHY    # back in steady state
+    assert b.trips == 1                       # re-entry is not a trip
+    # scrub recovery takes the same re-entry path
+    assert b.observe(0.3)
+    b.recovered("scrub", 0.93)
+    assert b.state == BreakerState.REPAIRED and b.recovery == "scrub"
+    assert not b.observe(0.97)
+    assert b.state == BreakerState.HEALTHY
+    # fallback canaries pass on the fallback engine; they say nothing about
+    # the primary path, so FALLBACK never silently re-enters HEALTHY
+    assert b.observe(0.2)
+    b.recovered("fallback_ref", 0.92)
+    assert b.state == BreakerState.FALLBACK
+    assert not b.observe(0.99)
+    assert b.state == BreakerState.FALLBACK
+
+
 def test_server_canary_trips_and_repairs(iris_model):
     """End-to-end degradation ladder: serving a faulty chip trips the
     breaker, which runs BIST + spare-row repair and re-votes the canary."""

@@ -152,16 +152,18 @@ def test_server_honors_compile_cache_size(iris_model):
     srv.close()
 
 
-def test_fault_hook_rename_alias(iris_model):
-    """compute_fault_hook was renamed fault_injection_hook; the old name
-    must keep working as a read/write alias (see README migration notes)."""
+def test_fault_hook_old_name_expired(iris_model):
+    """The compute_fault_hook -> fault_injection_hook deprecation window is
+    over: the old name now raises an actionable AttributeError both ways
+    (see README migration notes)."""
     m, _, _ = iris_model
     srv = TCAMServer(m.compiled, config=ServeConfig(background=False))
-    hook = lambda _X: None                                    # noqa: E731
-    srv.compute_fault_hook = hook
-    assert srv.fault_injection_hook is hook
-    srv.fault_injection_hook = None
-    assert srv.compute_fault_hook is None
+    with pytest.raises(AttributeError, match="fault_injection_hook"):
+        srv.compute_fault_hook = lambda _X: None
+    with pytest.raises(AttributeError, match="fault_injection_hook"):
+        _ = srv.compute_fault_hook
+    srv.fault_injection_hook = None          # the new name still works
+    assert srv.fault_injection_hook is None
     srv.close()
 
 
@@ -323,7 +325,7 @@ def test_worker_survives_batch_compute_failure(iris_model):
             if boom[0]:
                 raise RuntimeError("injected device fault")
 
-        srv.compute_fault_hook = hook
+        srv.fault_injection_hook = hook
         futs = srv.submit_many(Xte[:8])
         srv.drain(timeout=30)
         for f in futs:
@@ -347,13 +349,13 @@ def test_sync_compute_failure_raises_and_recovers(iris_model):
     def hook(_X):
         raise RuntimeError("injected device fault")
 
-    srv.compute_fault_hook = hook
+    srv.fault_injection_hook = hook
     futs = srv.submit_many(Xte[:4])
     with pytest.raises(ComputeFailed):           # sync mode surfaces the error
         srv.drain()
     assert all(isinstance(f.exception(), ComputeFailed) for f in futs)
     assert srv._outstanding == 0
-    srv.compute_fault_hook = None
+    srv.fault_injection_hook = None
     assert len(srv.serve(Xte[:4])) == 4
     srv.close()
 
@@ -363,7 +365,7 @@ def test_drain_timeout_raises_with_counters_intact(iris_model):
     cfg = ServeConfig(max_batch=4, min_bucket=4, max_delay_s=0.001)
     gate = threading.Event()
     with TCAMServer(m.compiled, config=cfg) as srv:
-        srv.compute_fault_hook = lambda _X: gate.wait(30)
+        srv.fault_injection_hook = lambda _X: gate.wait(30)
         futs = srv.submit_many(Xte[:4])
         with pytest.raises(TimeoutError):
             srv.drain(timeout=0.1)
@@ -380,7 +382,7 @@ def test_bounded_queue_sheds_with_typed_rejection(iris_model):
                       max_queue=4)
     gate = threading.Event()
     with TCAMServer(m.compiled, config=cfg) as srv:
-        srv.compute_fault_hook = lambda _X: gate.wait(30)
+        srv.fault_injection_hook = lambda _X: gate.wait(30)
         futs = [srv.submit(Xte[i % len(Xte)]) for i in range(30)]
         shed = [f for f in futs if f.done()
                 and isinstance(f.exception(), Rejected)]
@@ -397,7 +399,7 @@ def test_request_deadline_expires_in_queue(iris_model):
                       request_timeout_s=0.02)
     gate = threading.Event()
     with TCAMServer(m.compiled, config=cfg) as srv:
-        srv.compute_fault_hook = lambda _X: gate.wait(30)
+        srv.fault_injection_hook = lambda _X: gate.wait(30)
         futs = srv.submit_many(Xte[:12])         # batch 1 stalls; rest queue
         time.sleep(0.1)                          # queued requests expire
         gate.set()
@@ -438,7 +440,7 @@ def test_retry_budget_absorbs_transient_faults(iris_model):
             fails[0] -= 1
             raise RuntimeError("transient")
 
-    srv.compute_fault_hook = flaky
+    srv.fault_injection_hook = flaky
     res = srv.serve(Xte[:8])
     assert len(res) == 8                         # recovered within budget
     rel = srv.metrics()["reliability"]
